@@ -1,0 +1,88 @@
+"""Shared benchmark utilities.
+
+Efficacy protocol (paper Sec. 4.1): MSE / r^2 between a denoiser's
+x0-estimate and a *generalizing oracle* along shared DDIM trajectories.
+The paper's oracle is a trained U-Net; offline we use the **held-out
+empirical-Bayes oracle**: the exact posterior mean over an independent,
+larger sample from the same generative process.  Like the neural oracle,
+it represents the underlying manifold rather than the training set, so
+memorization (the Optimal denoiser's failure mode) scores poorly and
+generalizing estimators score well — the same ordering the paper's
+protocol induces.  ``examples/train_oracle.py`` additionally provides a
+real trained conv-denoiser oracle for cross-checking.
+"""
+from __future__ import annotations
+
+import resource
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import OptimalDenoiser, make_schedule, sampling_timesteps
+from repro.core.schedules import Schedule
+
+
+def time_call(fn, *args, repeats: int = 3, warmup: int = 1) -> float:
+    """Median wall-clock seconds per call (after jit warmup)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def peak_rss_gb() -> float:
+    return resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1e6
+
+
+def make_oracle(dataset_fn, n_oracle: int, schedule: Schedule, seed: int = 777):
+    """Held-out empirical-Bayes oracle (disjoint draw, larger support)."""
+    store = dataset_fn(n=n_oracle, seed=seed)
+    return OptimalDenoiser(store, schedule)
+
+
+def efficacy(denoiser, oracle, schedule: Schedule, dim: int,
+             num_samples: int = 32, num_steps: int = 10, seed: int = 0,
+             time_repeats: int = 2):
+    """Paper's protocol: run a shared DDIM trajectory; at each step compare
+    the denoiser's x0-hat with the oracle's.  Returns dict of metrics."""
+    ts = sampling_timesteps(schedule, num_steps)
+    rng = jax.random.PRNGKey(seed)
+    x = float(schedule.b[int(ts[0])]) * jax.random.normal(
+        rng, (num_samples, dim))
+    se, var_acc, n_acc = 0.0, [], 0
+    step_times = []
+    for t, t_prev in zip(ts[:-1], ts[1:]):
+        t = int(t)
+        x0_o = np.asarray(oracle(x, t))
+        x0_d = np.asarray(denoiser(x, t))   # warmup: jit compile per step
+        t0 = time.perf_counter()
+        x0_d = np.asarray(denoiser(x, t))
+        step_times.append(time.perf_counter() - t0)
+        se += float(((x0_d - x0_o) ** 2).sum())
+        var_acc.append(x0_o)
+        n_acc += x0_o.size
+        # advance the trajectory with the ORACLE (shared path for all
+        # methods, as the paper fixes the initial noise / trajectory)
+        x0c = jnp.clip(jnp.asarray(x0_o), -3, 3)
+        x = schedule.ddim_step(x, x0c, t, int(t_prev))
+    mse = se / n_acc
+    o = np.concatenate([v.reshape(-1) for v in var_acc])
+    r2 = 1.0 - se / float(((o - o.mean()) ** 2).sum())
+    return {"mse": mse, "r2": r2,
+            "time_per_step_s": float(np.median(step_times))}
+
+
+def fmt_rows(rows: list[dict], cols: list[str]) -> str:
+    head = " | ".join(f"{c:>14s}" for c in cols)
+    lines = [head, "-" * len(head)]
+    for r in rows:
+        lines.append(" | ".join(
+            f"{r.get(c, ''):>14.4g}" if isinstance(r.get(c), float)
+            else f"{str(r.get(c, '')):>14s}" for c in cols))
+    return "\n".join(lines)

@@ -1,0 +1,60 @@
+"""§Perf hillclimbing round 2 — informed by round-1 refutations.
+
+Round-1 findings: the 1.18 TB of train all-gathers are ACTIVATION
+d_model-resharding gathers (ZeRO-1 left them untouched), and
+paper-faithful golden decode matches full attention on bytes because the
+per-step summary re-pooling reads the whole cache anyway.
+
+  PYTHONPATH=src python -m benchmarks.hillclimb2
+"""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+from benchmarks.hillclimb import baseline, show  # noqa: E402
+from repro.launch import dryrun as D  # noqa: E402
+
+
+def main():
+    print("== pair 1 (round 2): qwen2.5-32b x train_4k ==")
+    baseline("qwen2.5-32b", "train_4k")
+    print(" H4: drop act_embed sharding (kills per-layer d-gathers) + "
+          "ZeRO-1 (kills weight gathers) + mb16 (memory via accumulation)")
+    show("H4 zero1+no-act-shard+mb16", D.run_one(
+        "qwen2.5-32b", "train_4k", zero1=True, num_microbatches=16,
+        extra_rules={"act_embed": None}, tag="_hc_h4"))
+    print(" H5: same at mb8 (fewer serial steps if memory allows)")
+    show("H5 zero1+no-act-shard+mb8", D.run_one(
+        "qwen2.5-32b", "train_4k", zero1=True, num_microbatches=8,
+        extra_rules={"act_embed": None}, tag="_hc_h5"))
+
+    print("== pair 2 (round 2): dbrx-132b x train_4k ==")
+    baseline("dbrx-132b", "train_4k")
+    print(" H4: cf=1.0 (round-1 win) + drop act_embed sharding")
+    show("H4 cf1+no-act-shard", D.run_one(
+        "dbrx-132b", "train_4k",
+        cfg_overrides={"capacity_factor": 1.0},
+        extra_rules={"act_embed": None}, tag="_hc_h4moe"))
+    print(" H5: H4 + mb16 if memory blew up")
+    show("H5 cf1+no-act-shard+mb16", D.run_one(
+        "dbrx-132b", "train_4k", num_microbatches=16,
+        cfg_overrides={"capacity_factor": 1.0},
+        extra_rules={"act_embed": None}, tag="_hc_h5moe"))
+
+    print("== pair 3 (round 2): qwen2.5-32b x long_500k ==")
+    baseline("qwen2.5-32b", "long_500k")
+    print(" H1': cached summaries streamed as scan xs/ys (carry-slicing "
+          "them caused SPMD replication in round 1)")
+    show("H1' cached summaries (xs/ys)", D.run_one(
+        "qwen2.5-32b", "long_500k",
+        cfg_overrides={"golden_cached_summaries": True}, tag="_hc_summ2"))
+    print(" H2': summaries + block 256 / 32 golden blocks")
+    show("H2' summ + block256", D.run_one(
+        "qwen2.5-32b", "long_500k",
+        cfg_overrides={"golden_cached_summaries": True,
+                       "golden_block_size": 256, "golden_blocks": 32},
+        tag="_hc_summ256b"))
+
+
+if __name__ == "__main__":
+    main()

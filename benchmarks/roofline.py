@@ -1,0 +1,67 @@
+"""§Roofline: aggregate the dry-run artifacts into the per-(arch x shape)
+three-term roofline table (EXPERIMENTS.md §Roofline reads this output)."""
+from __future__ import annotations
+
+import json
+import pathlib
+
+ART = pathlib.Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
+
+
+def load(mesh: str = "16x16", tag: str = "") -> list[dict]:
+    rows = []
+    for p in sorted(ART.glob(f"*_{mesh}{tag}.json")):
+        d = json.loads(p.read_text())
+        if d.get("mesh") != mesh:
+            continue
+        r = d["roofline"]
+        rows.append({
+            "arch": d["arch"], "shape": d["shape"],
+            "compute_s": r["compute_s"], "memory_s": r["memory_s"],
+            "collective_s": r["collective_s"],
+            "bottleneck": r["bottleneck"],
+            "hbm_gib": d["memory"].get("total_hbm_bytes", 0) / 2**30,
+            "fits": d.get("fits_hbm"),
+            "useful_ratio": d.get("useful_flops_ratio"),
+            "coll_gb": d["collectives"]["total"] / 1e9,
+        })
+    return rows
+
+
+def run(fast: bool = True):
+    rows = load()
+    summary = {}
+    if rows:
+        summary["n_combos"] = len(rows)
+        summary["n_fit"] = sum(1 for r in rows if r["fits"])
+        worst = min(rows, key=lambda r: r["useful_ratio"] or 9e9)
+        summary["worst_useful_ratio"] = f"{worst['arch']}/{worst['shape']}"
+        coll = max(rows, key=lambda r: (r["collective_s"]
+                                        / max(max(r["compute_s"],
+                                                  r["memory_s"]), 1e-12)))
+        summary["most_collective_bound"] = f"{coll['arch']}/{coll['shape']}"
+    return rows, summary
+
+
+def main():
+    rows, s = run()
+    if not rows:
+        print("no dry-run artifacts found — run: "
+              "PYTHONPATH=src python -m repro.launch.dryrun --all")
+        return
+    hdr = (f"{'arch':24s} {'shape':12s} {'compute_s':>10s} {'memory_s':>10s} "
+           f"{'collective_s':>12s} {'bneck':>10s} {'HBM GiB':>8s} "
+           f"{'fits':>5s} {'useful':>7s}")
+    print(hdr)
+    print("-" * len(hdr))
+    for r in rows:
+        print(f"{r['arch']:24s} {r['shape']:12s} {r['compute_s']:10.4f} "
+              f"{r['memory_s']:10.4f} {r['collective_s']:12.4f} "
+              f"{r['bottleneck']:>10s} {r['hbm_gib']:8.2f} "
+              f"{str(r['fits']):>5s} "
+              f"{r['useful_ratio'] if r['useful_ratio'] else -1:7.3f}")
+    print(s)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Table 1: per-step cost vs dataset size N.
+
+The paper's complexity claim: full-scan methods scale O(N D) per step
+while GoldDiff's exact-distance/aggregation work is decoupled from N
+(O(N d) proxy term only, d = D/16).  We time one denoise step across N
+and report the measured scaling exponents.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import time_call
+from repro.core import GoldDiff, GoldDiffConfig, OptimalDenoiser, make_schedule
+from repro.core.denoisers import PCADenoiser
+from repro.data import image_store
+
+
+def run(fast: bool = True):
+    sch = make_schedule("ddpm_linear", 1000)
+    sizes = [512, 1024, 2048] if fast else [1024, 4096, 16384, 65536]
+    t = 500
+    rows = []
+    for n in sizes:
+        store = image_store(n, 32, 32, 3, seed=0)
+        x = jax.random.normal(jax.random.PRNGKey(1), (4, store.dim))
+        full = OptimalDenoiser(store, sch)
+        gold = GoldDiff(OptimalDenoiser(store, sch), GoldDiffConfig())
+        pca = PCADenoiser(store, sch, chunk=256)
+        row = {"N": n,
+               "optimal_s": time_call(lambda: full(x, t)),
+               "golddiff_s": time_call(lambda: gold(x, t))}
+        if not fast and n <= 4096:
+            row["pca_s"] = time_call(lambda: pca(x, t))
+        row["speedup"] = row["optimal_s"] / row["golddiff_s"]
+        rows.append(row)
+
+    def slope(key):
+        ys = [r[key] for r in rows]
+        return float(np.polyfit(np.log(sizes), np.log(ys), 1)[0])
+
+    summary = {"optimal_scaling_exp": slope("optimal_s"),
+               "golddiff_scaling_exp": slope("golddiff_s")}
+    return rows, summary
+
+
+if __name__ == "__main__":
+    rows, s = run(fast=False)
+    for r in rows:
+        print(r)
+    print(s)

@@ -1,0 +1,49 @@
+"""Table 5: plug-and-play orthogonality — GoldDiff + {Optimal, Kamb}.
+
+(The Wiener filter is excluded as in the paper: it never scans the corpus.)
+"""
+from __future__ import annotations
+
+from benchmarks.common import efficacy, make_oracle
+from repro.core import (GoldDiff, GoldDiffConfig, OptimalDenoiser,
+                        PatchDenoiser, make_schedule)
+from repro.data import afhq_like, celeba_like
+
+
+def run(fast: bool = True):
+    sch = make_schedule("ddpm_linear", 1000)
+    datasets = {"celeba_like": celeba_like}
+    if not fast:
+        datasets["afhq_like"] = afhq_like
+    n = 512 if fast else 2048
+    rows = []
+    for ds, fn in datasets.items():
+        store = fn(n=n, seed=0)
+        oracle = make_oracle(fn, n * 2, sch)
+        for base_name, base_cls in (("optimal", OptimalDenoiser),
+                                    ("kamb", PatchDenoiser)):
+            kw = {} if base_cls is OptimalDenoiser else {"chunk": 64}
+            plain = base_cls(store, sch, **kw)
+            wrapped = GoldDiff(base_cls(store, sch, **kw), GoldDiffConfig())
+            for name, den in ((base_name, plain),
+                              (base_name + "+golddiff", wrapped)):
+                m = efficacy(den, oracle, sch, store.dim,
+                             num_samples=4 if fast else 16)
+                rows.append({"dataset": ds, "method": name, **m})
+    summary = {}
+    for ds in datasets:
+        for b in ("optimal", "kamb"):
+            p = next(r for r in rows if r["dataset"] == ds and r["method"] == b)
+            w = next(r for r in rows
+                     if r["dataset"] == ds and r["method"] == b + "+golddiff")
+            summary[f"{ds}_{b}_speedup"] = (p["time_per_step_s"]
+                                            / w["time_per_step_s"])
+            summary[f"{ds}_{b}_mse_delta"] = p["mse"] - w["mse"]
+    return rows, summary
+
+
+if __name__ == "__main__":
+    rows, s = run(fast=False)
+    for r in rows:
+        print(r)
+    print(s)

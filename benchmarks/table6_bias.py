@@ -1,0 +1,39 @@
+"""Table 6: biased (WSS) vs unbiased (SS) weight estimation on the golden
+subset (the ablation behind Sec. 3.2)."""
+from __future__ import annotations
+
+from benchmarks.common import efficacy, make_oracle
+from repro.core import GoldDiff, GoldDiffConfig, PCADenoiser, make_schedule
+from repro.data import afhq_like, celeba_like
+
+
+def run(fast: bool = True):
+    sch = make_schedule("ddpm_linear", 1000)
+    datasets = {"celeba_like": celeba_like}
+    if not fast:
+        datasets["afhq_like"] = afhq_like
+    n = 512 if fast else 2048
+    rows = []
+    for ds, fn in datasets.items():
+        store = fn(n=n, seed=0)
+        oracle = make_oracle(fn, n * 2, sch)
+        for weighting in ("wss", "ss"):
+            den = GoldDiff(PCADenoiser(store, sch, chunk=64,
+                                       weighting=weighting))
+            den.base.weighting = weighting   # keep the biased variant biased
+            m = efficacy(den, oracle, sch, store.dim,
+                         num_samples=4 if fast else 16)
+            rows.append({"dataset": ds, "weighting": weighting, **m})
+    summary = {}
+    for ds in datasets:
+        wss = next(r for r in rows if r["dataset"] == ds and r["weighting"] == "wss")
+        ss = next(r for r in rows if r["dataset"] == ds and r["weighting"] == "ss")
+        summary[f"{ds}_ss_beats_wss"] = bool(ss["mse"] <= wss["mse"])
+    return rows, summary
+
+
+if __name__ == "__main__":
+    rows, s = run(fast=False)
+    for r in rows:
+        print(r)
+    print(s)

@@ -1,0 +1,63 @@
+"""Golden attention on an LLM KV cache (the paper's mechanism transplanted
+onto long-context decode — DESIGN §4).
+
+Builds a reduced llama3.2-3b-family model, prefreezes a long cache, and
+compares full flash-decoding vs golden (top-k block) attention: agreement
+of the next-token distribution and the per-step FLOP estimate.
+
+  PYTHONPATH=src python examples/golden_decode.py
+"""
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import transformer as T
+from repro.models.module import init_params
+from repro.models.transformer import model_specs, zero_cache
+
+
+def main():
+    cfg = get_config("llama3.2-3b").reduced(num_layers=4, d_model=256,
+                                            d_ff=512, vocab=1024)
+    cfg = dataclasses.replace(cfg, golden_block_size=64)
+    s, b = 4096, 2
+    specs = model_specs(cfg)
+    params = init_params(specs, jax.random.PRNGKey(0))
+
+    # build a "long" cache by prefilling random tokens
+    toks = jax.random.randint(jax.random.PRNGKey(1), (b, s), 0,
+                              cfg.vocab_size, jnp.int32)
+    print(f"prefilling {s}-token cache...")
+    _, cache = T.prefill(cfg, params, toks)
+    pos = jnp.asarray(s - 1, jnp.int32)
+    tok = toks[:, -1]
+
+    cfg_full = dataclasses.replace(cfg, attn_kind_decode="full")
+    dec_full = jax.jit(lambda c, t, p: T.decode_step(cfg_full, params, c, t, p))
+    lg_full, _ = dec_full(cache, tok, pos)
+
+    nb = s // cfg.golden_block_size
+    print(f"\n{'k blocks':>9s} {'coverage':>9s} {'KL(full||gold)':>15s} "
+          f"{'top1 match':>11s} {'cache read':>11s}")
+    p_full = jax.nn.softmax(lg_full.astype(jnp.float32), -1)
+    for kb in (nb, nb // 2, nb // 4, nb // 8, nb // 16):
+        cfg_g = dataclasses.replace(cfg, attn_kind_decode="golden",
+                                    golden_blocks=kb)
+        dec = jax.jit(lambda c, t, p: T.decode_step(cfg_g, params, c, t, p))
+        lg_g, _ = dec(cache, tok, pos)
+        p_g = jax.nn.log_softmax(lg_g.astype(jnp.float32), -1)
+        kl = float(jnp.sum(p_full * (jnp.log(p_full + 1e-20) - p_g), -1).mean())
+        top1 = float((jnp.argmax(lg_g, -1) == jnp.argmax(lg_full, -1)).mean())
+        print(f"{kb:9d} {kb/nb:9.1%} {kl:15.5f} {top1:11.0%} "
+              f"{kb/nb:10.1%}+summaries")
+    print("\nTheorem 1 in action: golden attention reads a fraction of the"
+          "\ncache; the attention-score logit gap makes the truncated"
+          "\nposterior converge to the full one (KL -> 0 fast in k).")
+
+
+if __name__ == "__main__":
+    main()

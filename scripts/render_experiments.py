@@ -1,0 +1,91 @@
+"""Render dry-run artifacts into EXPERIMENTS.md (replaces the HTML-comment
+placeholders with generated markdown tables).
+
+  PYTHONPATH=src python scripts/render_experiments.py
+"""
+import json
+import pathlib
+import re
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+ART = ROOT / "artifacts" / "dryrun"
+EXP = ROOT / "EXPERIMENTS.md"
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def rows(mesh: str):
+    out = []
+    for p in sorted(ART.glob("*.json")):
+        d = json.loads(p.read_text())
+        if d.get("mesh") != mesh or "_hc_" in p.name:
+            continue
+        out.append(d)
+    out.sort(key=lambda d: (d["arch"], SHAPE_ORDER.index(d["shape"])))
+    return out
+
+
+def roofline_md(mesh: str) -> str:
+    lines = ["| arch | shape | compute_s | memory_s | collective_s | "
+             "bottleneck | HBM GiB | fits | useful |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for d in rows(mesh):
+        r = d["roofline"]
+        hbm = d["memory"].get("total_hbm_bytes", 0) / 2**30
+        lines.append(
+            f"| {d['arch']} | {d['shape']} | {r['compute_s']:.4g} | "
+            f"{r['memory_s']:.4g} | {r['collective_s']:.4g} | "
+            f"{r['bottleneck']} | {hbm:.2f} | "
+            f"{'yes' if d.get('fits_hbm') else 'NO'} | "
+            f"{d.get('useful_flops_ratio') or 0:.3f} |")
+    return "\n".join(lines)
+
+
+def analysis_md() -> str:
+    lines = ["Per-pair dominant bottleneck and the one-line lever "
+             "(full JSON incl. per-kind collective bytes in "
+             "`artifacts/dryrun/`):", ""]
+    lever = {
+        ("train", "collective"): "cut FSDP weight gathers (ZeRO-1) / "
+                                 "per-layer d-gathers (act sharding)",
+        ("train", "memory"): "more microbatches or tighter remat",
+        ("train", "compute"): "near roofline — reduce remat recompute",
+        ("prefill", "collective"): "overlap KV-cache writes; reduce "
+                                   "act_embed gathers",
+        ("prefill", "memory"): "larger attention tiles (fewer passes over KV)",
+        ("decode", "memory"): "cache reads dominate — golden attention / "
+                              "cached summaries cut bytes read per step",
+        ("decode", "collective"): "batch the LSE merges across layers",
+    }
+    lines += ["| arch | shape | bottleneck | MODEL/HLO | what would move it |",
+              "|---|---|---|---|---|"]
+    for d in rows("16x16"):
+        r = d["roofline"]
+        kind = "decode" if d["shape"] in ("decode_32k", "long_500k") else \
+            d["shape"].split("_")[0]
+        lines.append(
+            f"| {d['arch']} | {d['shape']} | {r['bottleneck']} | "
+            f"{d.get('useful_flops_ratio') or 0:.3f} | "
+            f"{lever.get((kind, r['bottleneck']), '—')} |")
+    return "\n".join(lines)
+
+
+def main():
+    text = EXP.read_text()
+    text = re.sub(r"<!-- ROOFLINE_TABLE -->.*?(?=\n### |\n## )",
+                  "<!-- ROOFLINE_TABLE -->\n" + roofline_md("16x16") + "\n",
+                  text, flags=re.S)
+    text = re.sub(r"<!-- MULTIPOD_TABLE -->.*?(?=\n## )",
+                  "<!-- MULTIPOD_TABLE -->\n" + roofline_md("2x16x16") + "\n",
+                  text, flags=re.S)
+    text = re.sub(r"<!-- ROOFLINE_ANALYSIS -->.*?(?=\n## )",
+                  "<!-- ROOFLINE_ANALYSIS -->\n" + analysis_md() + "\n",
+                  text, flags=re.S)
+    EXP.write_text(text)
+    print("EXPERIMENTS.md updated:",
+          len(rows("16x16")), "single-pod rows,",
+          len(rows("2x16x16")), "multi-pod rows")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,16 @@
+"""Core analytical-diffusion library (the paper's primary contribution)."""
+from repro.core.dataset import DatasetStore, make_store, downsample_proxy
+from repro.core.denoisers import (DENOISERS, OptimalDenoiser, PCADenoiser,
+                                  PatchDenoiser, WienerDenoiser, make_denoiser)
+from repro.core.golddiff import GoldDiff, GoldDiffConfig, schedule_sizes
+from repro.core.sampler import sample, sample_scan, denoise_trajectory
+from repro.core.schedules import Schedule, make_schedule, sampling_timesteps
+
+__all__ = [
+    "DatasetStore", "make_store", "downsample_proxy",
+    "DENOISERS", "OptimalDenoiser", "PCADenoiser", "PatchDenoiser",
+    "WienerDenoiser", "make_denoiser",
+    "GoldDiff", "GoldDiffConfig", "schedule_sizes",
+    "sample", "sample_scan", "denoise_trajectory",
+    "Schedule", "make_schedule", "sampling_timesteps",
+]

@@ -1,0 +1,86 @@
+"""In-memory dataset store consumed by the analytical denoisers.
+
+The store keeps the training set in flattened form ``X: [N, D]`` together
+with the low-dimensional proxy embedding ``proxy: [N, d]`` used by
+GoldDiff's coarse screening (paper Sec. 3.4: 4x spatial downsample) and
+precomputed squared norms (so pairwise distances become a single matmul).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+import numpy as np
+
+Array = jnp.ndarray
+
+
+class DatasetStore(NamedTuple):
+    X: Array                    # [N, D] flattened training points
+    proxy: Array                # [N, d] proxy-space embedding (d << D)
+    x_norms: Array              # [N]    ||x_i||^2
+    proxy_norms: Array          # [N]    ||proxy_i||^2
+    image_shape: tuple          # e.g. (32, 32, 3) or (2,) for 2-D toys
+    labels: Array | None = None  # [N] int class ids (conditional generation)
+
+    @property
+    def n(self) -> int:
+        return self.X.shape[0]
+
+    @property
+    def dim(self) -> int:
+        return self.X.shape[1]
+
+
+def downsample_proxy(x_img: Array, factor: int = 4) -> Array:
+    """Paper's proxy: spatially average-pooled image, flattened.
+
+    ``x_img``: [..., H, W, C].  Falls back to identity for non-image data
+    (ndim < 3 trailing dims) or tiny spatial dims.
+    """
+    if x_img.ndim < 3 or x_img.shape[-2] < factor or x_img.shape[-3] < factor:
+        return x_img.reshape(x_img.shape[: x_img.ndim - 1] + (-1,)) \
+            if x_img.ndim >= 2 else x_img
+    h, w, c = x_img.shape[-3:]
+    hh, ww = h // factor, w // factor
+    lead = x_img.shape[:-3]
+    v = x_img[..., : hh * factor, : ww * factor, :]
+    v = v.reshape(lead + (hh, factor, ww, factor, c)).mean(axis=(-4, -2))
+    return v.reshape(lead + (hh * ww * c,))
+
+
+def make_store(x: np.ndarray | Array, image_shape: tuple,
+               labels: np.ndarray | None = None,
+               proxy_factor: int = 4, dtype=jnp.float32) -> DatasetStore:
+    """Build a DatasetStore from raw data of shape [N, *image_shape]."""
+    x = jnp.asarray(x, dtype)
+    n = x.shape[0]
+    ximg = x.reshape((n,) + tuple(image_shape))
+    proxy = downsample_proxy(ximg, proxy_factor)
+    flat = x.reshape(n, -1)
+    return DatasetStore(
+        X=flat,
+        proxy=proxy,
+        x_norms=jnp.sum(flat * flat, axis=-1),
+        proxy_norms=jnp.sum(proxy * proxy, axis=-1),
+        image_shape=tuple(image_shape),
+        labels=None if labels is None else jnp.asarray(labels),
+    )
+
+
+def restrict(store: DatasetStore, idx: Array) -> DatasetStore:
+    """Materialize the sub-store at integer indices ``idx`` (e.g. one class)."""
+    return DatasetStore(
+        X=store.X[idx], proxy=store.proxy[idx], x_norms=store.x_norms[idx],
+        proxy_norms=store.proxy_norms[idx], image_shape=store.image_shape,
+        labels=None if store.labels is None else store.labels[idx],
+    )
+
+
+def pairwise_sq_dists(q: Array, x: Array, x_norms: Array | None = None) -> Array:
+    """||q - x_i||^2 for q: [B, D], x: [N, D] -> [B, N] via the matmul form."""
+    if x_norms is None:
+        x_norms = jnp.sum(x * x, axis=-1)
+    qn = jnp.sum(q * q, axis=-1, keepdims=True)
+    d2 = qn + x_norms[None, :] - 2.0 * q @ x.T
+    return jnp.maximum(d2, 0.0)

@@ -1,0 +1,142 @@
+"""Diffusion forward-process schedules.
+
+Every schedule is expressed in the generic affine form
+
+    x_t = a_t * x_0 + b_t * eps,   eps ~ N(0, I)
+
+so that VP (a_t = sqrt(alpha_bar), b_t = sqrt(1 - alpha_bar)) and VE
+(a_t = 1, b_t = sigma_t) are handled uniformly.  The analytical denoiser
+only ever consumes the *rescaled query* ``x_t / a_t`` and the
+noise-to-signal ratio ``sigma_t = b_t / a_t`` (paper Eq. 2 with
+``sigma_t^2 = (1 - alpha_bar)/alpha_bar``), which both exist for every
+schedule in this form.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax.numpy as jnp
+import numpy as np
+
+Array = jnp.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class Schedule:
+    """A discretized forward process with ``num_steps + 1`` grid points.
+
+    ``a[t]``/``b[t]`` are indexed by integer timestep t in [0, num_steps],
+    t = 0 is (almost) clean data, t = num_steps is (almost) pure noise.
+    """
+
+    name: str
+    a: np.ndarray  # signal coefficient, shape [T+1]
+    b: np.ndarray  # noise coefficient, shape [T+1]
+
+    @property
+    def num_steps(self) -> int:
+        return len(self.a) - 1
+
+    def sigma(self, t) -> Array:
+        """Noise-to-signal ratio sigma_t = b_t / a_t (paper's sigma_t)."""
+        a = jnp.asarray(self.a)[t]
+        b = jnp.asarray(self.b)[t]
+        return b / a
+
+    def g(self, t) -> Array:
+        """Normalized noise level g(sigma_t) in [0, 1] (paper Eq. 4/6).
+
+        Log-linear normalization between the smallest and largest sigma on
+        the grid: g = 1 at max noise, g = 0 at min noise.
+        """
+        sig = jnp.log(self.sigma(jnp.arange(1, self.num_steps + 1)))
+        lo, hi = jnp.min(sig), jnp.max(sig)
+        t = jnp.clip(jnp.asarray(t), 1, self.num_steps)
+        val = (jnp.log(self.sigma(t)) - lo) / (hi - lo)
+        return jnp.clip(val, 0.0, 1.0)
+
+    def sigma_np(self, t) -> np.ndarray:
+        """Host-side (numpy) sigma_t — safe to call inside jit traces with
+        a concrete integer t (the jnp variant would produce tracers)."""
+        return self.b[t] / self.a[t]
+
+    def g_np(self, t) -> float:
+        sig = np.log(self.b[1:] / self.a[1:])
+        lo, hi = sig.min(), sig.max()
+        t = int(np.clip(t, 1, self.num_steps))
+        return float(np.clip((np.log(self.sigma_np(t)) - lo) / (hi - lo),
+                             0.0, 1.0))
+
+    def add_noise(self, x0: Array, eps: Array, t) -> Array:
+        a = jnp.asarray(self.a, x0.dtype)[t]
+        b = jnp.asarray(self.b, x0.dtype)[t]
+        a = jnp.reshape(a, (-1,) + (1,) * (x0.ndim - 1)) if jnp.ndim(t) else a
+        b = jnp.reshape(b, (-1,) + (1,) * (x0.ndim - 1)) if jnp.ndim(t) else b
+        return a * x0 + b * eps
+
+    def ddim_step(self, x_t: Array, x0_hat: Array, t: int, t_prev: int,
+                  eta: float = 0.0, noise: Array | None = None) -> Array:
+        """Deterministic (eta=0) or stochastic DDIM update t -> t_prev."""
+        a_t = float(self.a[t]); b_t = float(self.b[t])
+        a_p = float(self.a[t_prev]); b_p = float(self.b[t_prev])
+        eps_hat = (x_t - a_t * x0_hat) / b_t
+        if eta == 0.0 or noise is None:
+            return a_p * x0_hat + b_p * eps_hat
+        # VP-style stochastic interpolation.
+        sig = eta * b_p / b_t * jnp.sqrt(jnp.maximum(b_t**2 - (a_t * b_p / a_p) ** 2, 0.0)) / b_t
+        dir_coeff = jnp.sqrt(jnp.maximum(b_p**2 - sig**2, 0.0))
+        return a_p * x0_hat + dir_coeff * eps_hat + sig * noise
+
+
+def ddpm_linear(num_steps: int = 1000, beta_start: float = 1e-4,
+                beta_end: float = 2e-2) -> Schedule:
+    betas = np.linspace(beta_start, beta_end, num_steps)
+    alpha_bar = np.cumprod(1.0 - betas)
+    a = np.concatenate([[1.0], np.sqrt(alpha_bar)])
+    b = np.concatenate([[0.0 + 1e-4], np.sqrt(1.0 - alpha_bar)])
+    return Schedule("ddpm_linear", a, b)
+
+
+def cosine(num_steps: int = 1000, s: float = 8e-3) -> Schedule:
+    t = np.arange(num_steps + 1) / num_steps
+    f = np.cos((t + s) / (1 + s) * np.pi / 2) ** 2
+    alpha_bar = np.clip(f / f[0], 1e-8, 1.0)
+    return Schedule("cosine", np.sqrt(alpha_bar),
+                    np.sqrt(np.maximum(1.0 - alpha_bar, 1e-8)))
+
+
+def edm_vp(num_steps: int = 1000, beta_d: float = 19.9, beta_min: float = 0.1) -> Schedule:
+    """EDM's VP parameterization (Karras et al. 2022, Table 1)."""
+    t = np.linspace(1e-3, 1.0, num_steps + 1)
+    log_abar = -0.5 * (0.5 * beta_d * t**2 + beta_min * t)
+    a = np.exp(log_abar)
+    b = np.sqrt(np.maximum(1.0 - a**2, 1e-8))
+    return Schedule("edm_vp", a, b)
+
+
+def edm_ve(num_steps: int = 1000, sigma_min: float = 2e-2,
+           sigma_max: float = 100.0) -> Schedule:
+    """VE: x_t = x_0 + sigma_t eps with geometric sigma grid; a_t = 1."""
+    sig = np.concatenate([[sigma_min * 0.5],
+                          np.geomspace(sigma_min, sigma_max, num_steps)])
+    return Schedule("edm_ve", np.ones(num_steps + 1), sig)
+
+
+SCHEDULES: dict[str, Callable[..., Schedule]] = {
+    "ddpm_linear": ddpm_linear,
+    "cosine": cosine,
+    "edm_vp": edm_vp,
+    "edm_ve": edm_ve,
+}
+
+
+def make_schedule(name: str, num_steps: int = 1000, **kw) -> Schedule:
+    return SCHEDULES[name](num_steps=num_steps, **kw)
+
+
+def sampling_timesteps(schedule: Schedule, num_sampling_steps: int) -> np.ndarray:
+    """Evenly spaced (in index space) decreasing grid incl. endpoints."""
+    T = schedule.num_steps
+    ts = np.unique(np.linspace(0, T, num_sampling_steps + 1).round().astype(int))
+    return ts[::-1]  # T ... 0

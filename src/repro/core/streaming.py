@@ -1,0 +1,170 @@
+"""Streaming (online) softmax aggregation.
+
+Two estimators from the paper (Sec. 3.2 / Tab. 6):
+
+* ``streaming_softmax_mean`` — the *unbiased* online softmax of
+  FlashAttention (Dao et al., 2022): a running (max, denominator,
+  accumulator) triple is updated chunk by chunk; the result is exactly
+  ``softmax(logits) @ values`` for any chunking.  This is what GoldDiff
+  applies on the golden subset.
+
+* ``weighted_streaming_softmax_mean`` — the *biased* WSS used by the PCA
+  denoiser (Lukoianov et al., 2025): each chunk computes a local softmax
+  mean and chunks are then combined with weights proportional to
+  ``n_c * exp(mean logit of chunk)`` (batch-level averaging).  Relative to
+  the exact softmax this systematically *flattens* the weight
+  distribution across chunks — the smoothing bias the paper identifies.
+
+Both operate on logits/values that may be given all at once (we chunk with
+``lax.scan`` for O(chunk) memory) and both expose a mergeable partial state
+(log-sum-exp merge) so that dataset shards on different devices can be
+combined exactly (used by ``repro.distributed.retrieval``).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+
+NEG_INF = -1e30
+
+
+class SoftmaxState(NamedTuple):
+    """Partial state of an online softmax: running max, denom, accum."""
+
+    m: Array      # [...]        running max of logits
+    l: Array      # [...]        sum of exp(logit - m)
+    acc: Array    # [..., D]     sum of exp(logit - m) * value
+
+
+def init_state(batch_shape: tuple[int, ...], dim: int, dtype=jnp.float32) -> SoftmaxState:
+    return SoftmaxState(
+        m=jnp.full(batch_shape, NEG_INF, dtype),
+        l=jnp.zeros(batch_shape, dtype),
+        acc=jnp.zeros(batch_shape + (dim,), dtype),
+    )
+
+
+def update_state(state: SoftmaxState, logits: Array, values: Array,
+                 mask: Array | None = None) -> SoftmaxState:
+    """Fold one chunk into the state.
+
+    logits: [..., C]; values: [..., C, D] or [C, D]; mask: [..., C] bool.
+    """
+    if mask is not None:
+        logits = jnp.where(mask, logits, NEG_INF)
+    m_chunk = jnp.max(logits, axis=-1)
+    m_new = jnp.maximum(state.m, m_chunk)
+    # Guard: if everything so far is masked, keep scale finite.
+    scale_old = jnp.exp(state.m - m_new)
+    p = jnp.exp(logits - m_new[..., None])
+    l_new = state.l * scale_old + jnp.sum(p, axis=-1)
+    acc_new = state.acc * scale_old[..., None] + p @ values \
+        if values.ndim == 2 else state.acc * scale_old[..., None] + jnp.einsum(
+            "...c,...cd->...d", p, values)
+    return SoftmaxState(m_new, l_new, acc_new)
+
+
+def merge_states(a: SoftmaxState, b: SoftmaxState) -> SoftmaxState:
+    """Exact log-sum-exp merge of two partial states (associative)."""
+    m = jnp.maximum(a.m, b.m)
+    sa = jnp.exp(a.m - m)
+    sb = jnp.exp(b.m - m)
+    return SoftmaxState(m, a.l * sa + b.l * sb,
+                        a.acc * sa[..., None] + b.acc * sb[..., None])
+
+
+def finalize(state: SoftmaxState) -> Array:
+    return state.acc / jnp.maximum(state.l, 1e-30)[..., None]
+
+
+def streaming_softmax_mean(logits: Array, values: Array, chunk: int = 4096,
+                           mask: Array | None = None) -> Array:
+    """Exact softmax(logits) @ values with O(chunk) working set.
+
+    logits: [..., N]; values: [N, D]; returns [..., D].
+    """
+    n = logits.shape[-1]
+    d = values.shape[-1]
+    chunk = min(chunk, n)
+    num = n // chunk
+    rem = n - num * chunk
+    batch_shape = logits.shape[:-1]
+    state = init_state(batch_shape, d, jnp.float32)
+
+    if num > 0:
+        lg = logits[..., : num * chunk].reshape(batch_shape + (num, chunk))
+        vals = values[: num * chunk].reshape(num, chunk, d)
+        msk = None
+        if mask is not None:
+            msk = mask[..., : num * chunk].reshape(batch_shape + (num, chunk))
+
+        def body(st, i):
+            m_i = None if msk is None else jnp.take(msk, i, axis=len(batch_shape))
+            return update_state(
+                st, jnp.take(lg, i, axis=len(batch_shape)).astype(jnp.float32),
+                vals[i].astype(jnp.float32), m_i), None
+
+        state, _ = jax.lax.scan(body, state, jnp.arange(num))
+    if rem:
+        m_r = None if mask is None else mask[..., num * chunk:]
+        state = update_state(state, logits[..., num * chunk:].astype(jnp.float32),
+                             values[num * chunk:].astype(jnp.float32), m_r)
+    return finalize(state)
+
+
+def weighted_streaming_softmax_mean(logits: Array, values: Array,
+                                    chunk: int = 4096) -> Array:
+    """Biased WSS (PCA-style batch-level averaging).
+
+    Each chunk c contributes its local softmax mean mu_c; chunks are
+    combined with weights w_c ∝ n_c * exp(mean_c(logits)).  Using the
+    *mean* logit instead of the log-sum-exp flattens inter-chunk
+    competition — the smoothing bias of Sec. 3.2.
+    """
+    n = logits.shape[-1]
+    d = values.shape[-1]
+    chunk = min(chunk, n)
+    num = max(n // chunk, 1)
+    usable = num * chunk if num * chunk <= n else n
+    lg = logits[..., :usable].reshape(logits.shape[:-1] + (num, -1)).astype(jnp.float32)
+    vals = values[:usable].reshape(num, -1, d).astype(jnp.float32)
+    # local softmax mean per chunk: [..., num, D]
+    p = jax.nn.softmax(lg, axis=-1)
+    mu = jnp.einsum("...nc,ncd->...nd", p, vals)
+    # chunk weights from mean logit (the bias): [..., num]
+    wc = jax.nn.softmax(jnp.mean(lg, axis=-1), axis=-1)
+    return jnp.einsum("...n,...nd->...d", wc, mu)
+
+
+def wss_combine(logits: Array, values: Array, chunk: int = 64) -> Array:
+    """Biased WSS over per-query support sets.
+
+    logits: [..., K]; values: [..., K, D] (aligned).  Same bias model as
+    ``weighted_streaming_softmax_mean`` (chunk-local softmax means combined
+    by mean-logit weights) but for gathered golden subsets.
+    """
+    k = logits.shape[-1]
+    chunk = max(1, min(chunk, k))
+    nc = k // chunk
+    usable = nc * chunk
+    lg = logits[..., :usable].reshape(logits.shape[:-1] + (nc, chunk))
+    lg = lg.astype(jnp.float32)
+    vals = values[..., :usable, :].reshape(
+        values.shape[:-2] + (nc, chunk, values.shape[-1])).astype(jnp.float32)
+    p = jax.nn.softmax(lg, axis=-1)
+    mu = jnp.einsum("...nc,...ncd->...nd", p, vals)
+    wc = jax.nn.softmax(jnp.mean(lg, axis=-1), axis=-1)
+    return jnp.einsum("...n,...nd->...d", wc, mu)
+
+
+def softmax_mean_reference(logits: Array, values: Array,
+                           mask: Array | None = None) -> Array:
+    """Naive one-shot reference (for tests)."""
+    if mask is not None:
+        logits = jnp.where(mask, logits, NEG_INF)
+    w = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    return jnp.einsum("...n,nd->...d", w, values.astype(jnp.float32))

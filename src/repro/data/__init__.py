@@ -1,0 +1,12 @@
+"""Data substrate: procedural datasets + token pipeline."""
+from repro.data.synthetic import (DATASETS, afhq_like, celeba_like,
+                                  cifar_like, gmm, image_store,
+                                  imagenet_like, make_dataset, mnist_like,
+                                  moons, procedural_images)
+from repro.data.tokens import TokenPipeline, TokenPipelineConfig, fast_batch
+
+__all__ = [
+    "DATASETS", "make_dataset", "moons", "gmm", "image_store",
+    "mnist_like", "cifar_like", "celeba_like", "afhq_like", "imagenet_like",
+    "procedural_images", "TokenPipeline", "TokenPipelineConfig", "fast_batch",
+]

@@ -1,0 +1,77 @@
+"""Deterministic synthetic token pipeline for LLM training/serving paths.
+
+A seeded mixture of order-1 Markov chains over the vocabulary plus copy
+spans: enough structure that a ~100M model's loss visibly falls within a
+few hundred steps, fully reproducible, zero files.  The pipeline yields
+already-sharded global batches (callers pass device_put targets).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jnp.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class TokenPipelineConfig:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    num_chains: int = 8
+    copy_prob: float = 0.15
+    seed: int = 0
+
+
+class TokenPipeline:
+    """Stateless-per-step token source: batch(step) is pure in (cfg, step)."""
+
+    def __init__(self, cfg: TokenPipelineConfig):
+        self.cfg = cfg
+        rng = np.random.default_rng(cfg.seed)
+        v = min(cfg.vocab_size, 4096)  # transition table over a head-vocab
+        self._v = v
+        # sparse-ish row-stochastic transition tables, one per chain
+        self.tables = []
+        for _ in range(cfg.num_chains):
+            logits = rng.gumbel(size=(v, 32))
+            cols = rng.integers(0, v, (v, 32))
+            self.tables.append((cols, jax.nn.softmax(jnp.asarray(logits), -1)))
+
+    def batch(self, step: int) -> dict[str, Array]:
+        cfg = self.cfg
+        rng = np.random.default_rng((cfg.seed << 20) ^ step)
+        b, s, v = cfg.global_batch, cfg.seq_len, self._v
+        chain = rng.integers(0, cfg.num_chains, b)
+        toks = np.empty((b, s + 1), np.int32)
+        toks[:, 0] = rng.integers(0, v, b)
+        # vectorized chain walk
+        for i in range(b):
+            cols, probs = self.tables[chain[i]]
+            probs = np.asarray(probs)
+            cur = toks[i, 0]
+            u = rng.random(s)
+            for j in range(1, s + 1):
+                p = probs[cur]
+                cur = cols[cur, np.searchsorted(np.cumsum(p), u[j - 1])]
+                toks[i, j] = cur
+        # splice copy spans (long-range structure)
+        n_copy = int(cfg.copy_prob * b)
+        for i in range(n_copy):
+            span = rng.integers(8, min(64, s // 4))
+            src = rng.integers(0, s - 2 * span)
+            dst = rng.integers(src + span, s - span)
+            toks[i, dst:dst + span] = toks[i, src:src + span]
+        return {"tokens": jnp.asarray(toks[:, :-1]),
+                "labels": jnp.asarray(toks[:, 1:])}
+
+
+def fast_batch(cfg: TokenPipelineConfig, step: int) -> dict[str, Array]:
+    """Cheap jax-side batch (uniform tokens) for smoke tests/benchmarks."""
+    key = jax.random.PRNGKey((cfg.seed << 20) ^ step)
+    toks = jax.random.randint(key, (cfg.global_batch, cfg.seq_len + 1), 0,
+                              cfg.vocab_size, jnp.int32)
+    return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}

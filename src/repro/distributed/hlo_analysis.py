@@ -1,0 +1,215 @@
+"""Roofline-term extraction from compiled XLA artifacts (EXPERIMENTS §Roofline).
+
+* FLOPs / bytes — ``compiled.cost_analysis()``.
+* collective bytes — NOT in cost_analysis: parsed from the optimized HLO
+  (``compiled.as_text()``) by summing the result-shape bytes of every
+  all-gather / all-reduce / reduce-scatter / all-to-all /
+  collective-permute op.  (Result bytes are the standard proxy for bytes
+  crossing links; all-reduce moves ~2x this in a ring — we report the raw
+  sum and keep the convention fixed across all experiments so deltas are
+  comparable.)
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI (launch/mesh.py).
+"""
+from __future__ import annotations
+
+import math
+import re
+
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.:  %all-gather.3 = bf16[2,16,128]{2,1,0} all-gather(...)
+_RE = re.compile(
+    r"=\s+(?:\()?\s*(\w+)\[([0-9,]*)\][^=]*?\s(" + "|".join(_COLLECTIVES)
+    + r")(?:-start|-done)?\(")
+# tuple-result collectives:  = (bf16[..], bf16[..]) all-reduce(...)
+_RE_TUPLE = re.compile(
+    r"=\s+\(([^)]*)\)\s+(" + "|".join(_COLLECTIVES) + r")(?:-start|-done)?\(")
+_RE_SHAPE = re.compile(r"(\w+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    nb = _DTYPE_BYTES.get(dtype)
+    if nb is None:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * nb
+
+
+def collective_bytes(hlo_text: str) -> dict[str, float]:
+    """Per-kind + total result bytes of collective ops in optimized HLO."""
+    out: dict[str, float] = {k: 0.0 for k in _COLLECTIVES}
+    seen_done = set()
+    for line in hlo_text.splitlines():
+        if "-done" in line:
+            continue  # avoid double counting async start/done pairs
+        m = _RE_TUPLE.search(line)   # tuple results first (scalar RE would
+        if m:                        # otherwise count only the first shape)
+            shapes, kind = m.groups()
+            for dt, dd in _RE_SHAPE.findall(shapes):
+                out[kind] += _shape_bytes(dt, dd)
+            continue
+        m = _RE.search(line)
+        if m:
+            dtype, dims, kind = m.groups()
+            out[kind] += _shape_bytes(dtype, dims)
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    return out
+
+
+def cost_summary(compiled) -> dict[str, float]:
+    try:
+        ca = compiled.cost_analysis()
+    except Exception:
+        ca = None
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    ca = ca or {}
+    return {"flops": float(ca.get("flops", 0.0)),
+            "bytes": float(ca.get("bytes accessed", 0.0)),
+            "raw": {k: float(v) for k, v in ca.items()
+                    if isinstance(v, (int, float)) and not math.isnan(float(v))
+                    and ("utilization" not in k)}}
+
+
+def memory_summary(compiled) -> dict[str, float]:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return {}
+    if ma is None:
+        return {}
+    keys = ("argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "alias_size_in_bytes",
+            "generated_code_size_in_bytes")
+    out = {}
+    for k in keys:
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = float(v)
+    if out:
+        out["total_hbm_bytes"] = (out.get("argument_size_in_bytes", 0)
+                                  + out.get("output_size_in_bytes", 0)
+                                  + out.get("temp_size_in_bytes", 0)
+                                  - out.get("alias_size_in_bytes", 0))
+    return out
+
+
+def roofline_terms(flops: float, hbm_bytes: float, coll_bytes: float,
+                   chips: int) -> dict[str, float]:
+    """The three roofline terms in seconds (global work / global throughput).
+
+    cost_analysis totals are per-module as compiled for one device-program
+    under SPMD; XLA reports whole-module numbers for the partitioned
+    program, i.e. per-chip work.  We therefore divide by per-chip peak.
+    """
+    compute = flops / PEAK_FLOPS_BF16
+    memory = hbm_bytes / HBM_BW
+    collective = coll_bytes / ICI_BW
+    terms = {"compute_s": compute, "memory_s": memory,
+             "collective_s": collective}
+    terms["bottleneck"] = max(terms, key=lambda k: terms[k]).replace("_s", "")
+    return terms
+
+
+def loop_corrections(cfg, shape, chips: int,
+                     q_chunk: int = 512, kv_chunk: int = 1024) -> dict:
+    """Analytic correction for inner-loop undercounting (per chip).
+
+    The dry-run unrolls the LAYER loop, so per-layer costs are exact; but
+    two inner ``lax.scan``s remain whose bodies XLA counts once:
+
+    * flash attention (models/layers.py): body = one (q_chunk x kv_chunk)
+      tile; actual iterations = (S/q_chunk) * (S/kv_chunk).
+      fwd FLOPs per tile = 4 * B * H * qc * kc * dh  (QK^T + PV).
+    * SSD chunk scan (models/mamba2.py): body = one length-L chunk;
+      actual iterations = S / L.
+      fwd FLOPs per chunk ~= B * (L^2*N + 2*L^2*H*P + 4*L*H*P*N).
+
+    We add the missing (iters - 1) * body cost, x4 for train (recompute
+    + backward under full remat: fwd + fwd + 2*fwd), and divide by chips
+    (ideal sharding).  Elementwise/softmax terms are omitted (<5% of the
+    matmul cost at these sizes).  Bytes corrections use the per-tile
+    operand/result traffic of the same einsums.
+    """
+    if shape.kind == "decode":
+        return {"flops": 0.0, "bytes": 0.0}
+    b = shape.global_batch
+    s = shape.seq_len
+    mult = 4.0 if shape.kind == "train" else 1.0
+    fl = 0.0
+    by = 0.0
+    dh = cfg.hdim
+    h = cfg.num_heads
+    for i in range(cfg.num_layers):
+        li = i % cfg.period
+        if cfg.mixer_kind(li) == "A" and h:
+            qc = min(q_chunk, s)
+            kc = min(kv_chunk, s)
+            iters = (s // qc) * (s // kc)
+            tile_fl = 4.0 * b * h * qc * kc * dh
+            tile_by = 4.0 * b * h * (qc * dh + kc * dh + 2 * qc * kc) \
+                + 2.0 * b * cfg.num_kv_heads * kc * dh
+            fl += (iters - 1) * tile_fl
+            by += (iters - 1) * tile_by
+        elif cfg.ssm_state:
+            l = min(cfg.ssm_chunk, s)
+            iters = s // l
+            hh = (cfg.ssm_expand * cfg.d_model) // cfg.ssm_head_dim
+            p = cfg.ssm_head_dim
+            n = cfg.ssm_state
+            chunk_fl = b * (l * l * n + 2.0 * l * l * hh * p
+                            + 4.0 * l * hh * p * n)
+            chunk_by = 4.0 * b * l * (hh * p + 2 * n + l) \
+                + 4.0 * b * hh * p * n
+            fl += (iters - 1) * chunk_fl
+            by += (iters - 1) * chunk_by
+    return {"flops": mult * fl / chips, "bytes": mult * by / chips}
+
+
+def model_flops(cfg, shape) -> float:
+    """MODEL_FLOPS = 6 N_active D (train) / 2 N_active D (inference).
+
+    N_active excludes the embedding gather but includes the LM head; MoE
+    layers count experts_per_token / num_experts of their expert params.
+    """
+    d, ff, L = cfg.d_model, cfg.d_ff, cfg.num_layers
+    n_attn = 0
+    n_mlp_dense = 3 * d * ff
+    n_moe_active = (3 * d * ff * cfg.experts_per_token
+                    if cfg.num_experts else 0)
+    if cfg.num_heads:
+        hd = cfg.hdim
+        n_attn = d * cfg.num_heads * hd * 2 + d * cfg.num_kv_heads * hd * 2
+    n_mamba = 0
+    if cfg.ssm_state:
+        di = cfg.ssm_expand * d
+        n_mamba = d * (2 * di + 2 * cfg.ssm_state + di // cfg.ssm_head_dim) \
+            + di * d
+    n = 0
+    for i in range(L):
+        li = i % cfg.period
+        n += n_attn if cfg.mixer_kind(li) == "A" else n_mamba
+        kind = cfg.mlp_kind(li)
+        n += {"dense": n_mlp_dense, "moe": n_moe_active, "none": 0}[kind]
+    n += d * cfg.vocab_size                      # LM head
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    return 2.0 * n * shape.global_batch          # decode: one token / seq

@@ -1,0 +1,105 @@
+"""Distributed golden retrieval over a dataset sharded on the `data` axis.
+
+The GoldDiff selection + aggregation pipeline, shard-parallel (DESIGN §3):
+
+  1. every shard screens its local dataset rows with the proxy distance
+     and re-ranks its local candidates exactly (embarrassingly parallel);
+  2. local top-k (index, distance) pairs are all-gathered — k floats+ints
+     per shard, NOT data rows;
+  3. the golden set = global top-k over the gathered candidates;
+  4. each shard aggregates its *owned* golden members with the unbiased
+     streaming softmax and partial states merge exactly with a
+     log-sum-exp ``psum`` (streaming.merge semantics), so the distributed
+     estimate is bit-comparable to the single-host one.
+
+This is the same two-stage top-k + LSE-merge pattern the decode-attention
+path uses for sharded KV caches (models/layers.py) — the paper's
+mechanism implemented once, reused twice.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.dataset import DatasetStore, downsample_proxy
+
+Array = jnp.ndarray
+NEG_INF = -1e30
+
+
+def shard_store(store: DatasetStore, mesh: Mesh, axis: str = "data"
+                ) -> DatasetStore:
+    """Place the dataset rows sharded over ``axis`` (pads N to divisor)."""
+    n_sh = mesh.shape[axis]
+    n = store.n
+    pad = (-n) % n_sh
+    def pad_rows(x, fill=0.0):
+        if pad == 0:
+            return x
+        cfg = [(0, pad)] + [(0, 0)] * (x.ndim - 1)
+        return jnp.pad(x, cfg, constant_values=fill)
+    sh = NamedSharding(mesh, P(axis))
+    return DatasetStore(
+        X=jax.device_put(pad_rows(store.X), sh),
+        proxy=jax.device_put(pad_rows(store.proxy), sh),
+        # +inf norms on padded rows exclude them from every top-k
+        x_norms=jax.device_put(pad_rows(store.x_norms, jnp.inf), sh),
+        proxy_norms=jax.device_put(pad_rows(store.proxy_norms, jnp.inf), sh),
+        image_shape=store.image_shape,
+        labels=None if store.labels is None
+        else jax.device_put(pad_rows(store.labels, -1), sh),
+    )
+
+
+def distributed_golden_denoise(store: DatasetStore, mesh: Mesh, q: Array,
+                               sigma2: float, m: int, k: int,
+                               proxy_factor: int = 4,
+                               axis: str = "data") -> Array:
+    """Full GoldDiff step, shard-parallel.  q: [B, D] (rescaled query)."""
+    n_sh = mesh.shape[axis]
+    m_loc = max(1, -(-m // n_sh))
+    k_loc = max(1, -(-k // n_sh))
+
+    def local(x_sh, xn_sh, proxy_sh, pn_sh, q_rep):
+        # 1. local coarse screening
+        q_img = q_rep.reshape(q_rep.shape[:-1] + tuple(store.image_shape))
+        qp = downsample_proxy(q_img, proxy_factor)
+        d2p = (jnp.sum(qp * qp, -1, keepdims=True) + pn_sh[None, :]
+               - 2.0 * qp @ proxy_sh.T)
+        _, cand = jax.lax.top_k(-d2p, min(m_loc, x_sh.shape[0]))
+        # 2. local exact re-rank inside candidates
+        xc = x_sh[cand]                                    # [B, m_loc, D]
+        d2 = jnp.sum((q_rep[:, None, :] - xc) ** 2, -1)
+        d2 = jnp.where(jnp.isfinite(xn_sh[cand]), d2, jnp.inf)
+        kk = min(k_loc, d2.shape[-1])
+        neg, pos = jax.lax.top_k(-d2, kk)
+        # 3. global top-k over gathered local winners
+        gathered = jax.lax.all_gather(-neg, axis, axis=1)   # [B, n_sh, kk]
+        flat = gathered.reshape(q_rep.shape[0], -1)
+        kth = -jax.lax.top_k(-flat, min(k, flat.shape[-1]))[0][:, -1]
+        # 4. aggregate locally owned golden members (d2 <= global kth)
+        sel = -neg                                          # local dists [B,kk]
+        keep = sel <= kth[:, None]
+        lg = jnp.where(keep, -sel / (2.0 * sigma2), NEG_INF)
+        m_l = jnp.max(lg, -1)
+        p = jnp.exp(lg - m_l[:, None])
+        l_l = jnp.sum(p, -1)
+        xsel = jnp.take_along_axis(xc, pos[..., None], axis=1)
+        acc_l = jnp.einsum("bk,bkd->bd", p, xsel)
+        # exact LSE merge across shards
+        m_g = jax.lax.pmax(m_l, axis)
+        sc = jnp.exp(m_l - m_g)
+        l_g = jax.lax.psum(l_l * sc, axis)
+        acc_g = jax.lax.psum(acc_l * sc[:, None], axis)
+        return acc_g / jnp.maximum(l_g, 1e-30)[:, None]
+
+    spec_row = P(axis)
+    return jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(spec_row, spec_row, spec_row, spec_row, P()),
+        out_specs=P(),
+        check_vma=False,
+    )(store.X, store.x_norms, store.proxy, store.proxy_norms, q)

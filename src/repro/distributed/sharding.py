@@ -1,0 +1,168 @@
+"""Logical-axis sharding (MaxText-style) for the model zoo.
+
+Every parameter / activation carries *logical* axis names; a ``Rules``
+table maps logical names to mesh axes per execution mode.  A thread-local
+context makes ``shard(x, *axes)`` a no-op outside a mesh (CPU smoke tests
+see one device and zero sharding machinery).
+
+Mesh axes: ``("data", "model")`` single pod, ``("pod", "data", "model")``
+multi-pod (launch/mesh.py).  GSPMD pads non-divisible dimensions (e.g. 40
+query heads over model=16); the padding waste shows up in the roofline's
+MODEL_FLOPS / HLO_FLOPs ratio, where we track it.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_CTX = threading.local()
+
+
+@dataclasses.dataclass(frozen=True)
+class Rules:
+    mesh: Mesh | None
+    table: dict[str, Any]  # logical axis -> mesh axis | tuple | None
+
+    def spec(self, logical_axes: tuple, shape: tuple | None = None) -> P:
+        """Resolve logical axes to a PartitionSpec.
+
+        When ``shape`` is given, mesh axes whose (cumulative) size does not
+        evenly divide the dimension are dropped — NamedSharding on real
+        avals requires exact divisibility (non-divisible cases, e.g. 40 q
+        heads over model=16, use the flattened head*dim layouts instead;
+        see models/layers.py).
+        """
+        if self.mesh is None:
+            return P()
+        out = []
+        used: set[str] = set()
+        for i, ax in enumerate(logical_axes):
+            m = self.table.get(ax) if ax is not None else None
+            if m is None:
+                out.append(None)
+                continue
+            ms = (m,) if isinstance(m, str) else tuple(m)
+            ms = tuple(a for a in ms if a in self.mesh.axis_names
+                       and a not in used)
+            if shape is not None:
+                keep = []
+                prod = 1
+                for a in ms:
+                    prod *= self.mesh.shape[a]
+                    if shape[i] % prod == 0:
+                        keep.append(a)
+                    else:
+                        break
+                ms = tuple(keep)
+            used.update(ms)
+            out.append(ms if len(ms) > 1 else (ms[0] if ms else None))
+        return P(*out)
+
+    def sharding(self, logical_axes: tuple,
+                 shape: tuple | None = None) -> NamedSharding | None:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, self.spec(logical_axes, shape))
+
+
+def _pod(mesh: Mesh | None) -> tuple[str, ...]:
+    if mesh is not None and "pod" in mesh.axis_names:
+        return ("pod", "data")
+    return ("data",)
+
+
+def make_rules(mode: str, mesh: Mesh | None = None,
+               overrides: dict | None = None) -> Rules:
+    """mode: 'train' | 'prefill' | 'decode' | 'decode_long' | 'none'."""
+    if mode == "none" or mesh is None:
+        return Rules(None, {})
+    batch = _pod(mesh)
+    base = {
+        # weights
+        "embed": batch,          # FSDP / ZeRO-3 over the data axis
+        "vocab": "model",
+        "mlp": "model",
+        "heads": "model",
+        "kv_heads": "model",
+        "head_dim": None,
+        "experts": "model",
+        "expert_mlp": batch,     # second shard dim of expert weights
+        "mamba_inner": "model",
+        "mamba_conv": "model",
+        "mamba_heads": "model",
+        "layers": None,
+        # activations
+        "batch": batch,
+        "seq": None,
+        "act_embed": None,
+        "act_heads": "model",
+        "act_mlp": "model",
+        "act_experts": "model",
+        "kv_seq": None,
+    }
+    if mode == "train":
+        # Shard the residual stream's d_model over `model` (Megatron-SP
+        # analogue): the remat-saved per-layer activations [B, S, d]
+        # dominate train HBM (43 GiB/chip for qwen2.5-32b unsharded).
+        # d_model divides 16 for every assigned arch; sharding SEQ instead
+        # provokes involuntary SPMD rematerialization inside the flash
+        # attention q-chunk dynamic_slice (observed: +40% HBM).
+        base["act_embed"] = "model"
+    elif mode == "prefill":
+        base["act_embed"] = "model"
+        base["kv_seq"] = "model"       # prefill writes a model-sharded cache
+    elif mode == "decode":
+        base["kv_seq"] = "model"       # flash-decoding: split-S over model
+        base["act_heads"] = None       # q replicated for the seq-split merge
+    elif mode == "decode_long":
+        base["kv_seq"] = ("data", "model") if "pod" not in mesh.axis_names \
+            else ("pod", "data", "model")
+        base["batch"] = None           # global_batch = 1
+        base["act_heads"] = None
+        base["expert_mlp"] = ("data",)
+        base["embed"] = ("data",)
+    else:
+        raise ValueError(mode)
+    if overrides:
+        base.update(overrides)
+    return Rules(mesh, base)
+
+
+@contextlib.contextmanager
+def use_rules(rules: Rules):
+    prev = getattr(_CTX, "rules", None)
+    _CTX.rules = rules
+    try:
+        yield rules
+    finally:
+        _CTX.rules = prev
+
+
+def current_rules() -> Rules:
+    r = getattr(_CTX, "rules", None)
+    return r if r is not None else Rules(None, {})
+
+
+def shard(x, *logical_axes):
+    """Constrain activation sharding (no-op without an active mesh)."""
+    r = current_rules()
+    if r.mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, r.sharding(tuple(logical_axes), tuple(x.shape)))
+
+
+def mesh_axis_size(*names: str) -> int:
+    r = current_rules()
+    if r.mesh is None:
+        return 1
+    n = 1
+    for name in names:
+        if name in r.mesh.axis_names:
+            n *= r.mesh.shape[name]
+    return n

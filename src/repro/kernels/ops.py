@@ -1,0 +1,55 @@
+"""Jit'd public wrappers over the Pallas kernels with backend dispatch.
+
+``backend``:
+  * "pallas"            — lower the TPU kernel (real hardware)
+  * "pallas_interpret"  — execute the kernel body in Python on CPU
+                          (correctness validation; the tests use this)
+  * "xla"               — the pure-jnp reference math (used by the
+                          multi-pod dry-run, which compiles for the CPU
+                          backend where Pallas TPU kernels cannot lower)
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.golden_aggregate import golden_aggregate as _agg
+from repro.kernels.golden_attention import (golden_attention_decode as _gattn,
+                                            select_golden_blocks)
+from repro.kernels.pdist import pdist as _pdist
+
+DEFAULT_BACKEND = "pallas_interpret"
+
+
+def pdist(q, x, backend: str = DEFAULT_BACKEND, **kw):
+    if backend == "xla":
+        return ref.pdist_ref(q, x)
+    return _pdist(q, x, interpret=(backend != "pallas"), **kw)
+
+
+def golden_aggregate(q, x, sigma2: float, backend: str = DEFAULT_BACKEND, **kw):
+    if backend == "xla":
+        return ref.golden_aggregate_ref(q, x, sigma2)
+    return _agg(q, x, float(sigma2), interpret=(backend != "pallas"), **kw)
+
+
+def golden_attention_decode(q, k, v, block_idx, valid, block_size: int = 128,
+                            backend: str = DEFAULT_BACKEND):
+    if backend == "xla":
+        return ref.golden_attention_decode_ref(q, k, v, block_idx, valid,
+                                               block_size)
+    return _gattn(q, k, v, block_idx, valid, block_size=block_size,
+                  interpret=(backend != "pallas"))
+
+
+def flash_attention(q, k, v, causal: bool = True,
+                    backend: str = DEFAULT_BACKEND, **kw):
+    if backend == "xla":
+        return ref.flash_attention_ref(q, k, v, causal)
+    return _flash(q, k, v, causal=causal, interpret=(backend != "pallas"),
+                  **kw)
+
+
+__all__ = ["pdist", "golden_aggregate", "golden_attention_decode",
+           "select_golden_blocks", "flash_attention"]

@@ -1,0 +1,63 @@
+"""Pure-jnp oracles for every Pallas kernel (tests assert allclose)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def pdist_ref(q: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    q = q.astype(jnp.float32)
+    x = x.astype(jnp.float32)
+    d2 = (jnp.sum(q * q, -1)[:, None] + jnp.sum(x * x, -1)[None, :]
+          - 2.0 * q @ x.T)
+    return jnp.maximum(d2, 0.0)
+
+
+def golden_aggregate_ref(q: jnp.ndarray, x: jnp.ndarray,
+                         sigma2: float) -> jnp.ndarray:
+    lg = -pdist_ref(q, x) / (2.0 * sigma2)
+    w = jax.nn.softmax(lg, axis=-1)
+    return (w @ x.astype(jnp.float32)).astype(q.dtype)
+
+
+def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                        causal: bool = True) -> jnp.ndarray:
+    """q: [B,Hkv,G,S,dh]; k/v: [B,Hkv,S,dh] — dense softmax attention."""
+    dh = q.shape[-1]
+    s = q.shape[3]
+    scores = jnp.einsum("bhgqd,bhkd->bhgqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * dh ** -0.5
+    if causal:
+        mask = jnp.tril(jnp.ones((s, s), bool))
+        scores = jnp.where(mask, scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhgqk,bhkd->bhgqd", w,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+def golden_attention_decode_ref(q: jnp.ndarray, k: jnp.ndarray,
+                                v: jnp.ndarray, block_idx: jnp.ndarray,
+                                valid: jnp.ndarray,
+                                block_size: int = 128) -> jnp.ndarray:
+    """Gather golden blocks densely, mask invalid, softmax-attend."""
+    b, hkv, g, dh = q.shape
+    s = k.shape[2]
+    kb = block_idx.shape[-1]
+    nb = s // block_size
+    idx = jnp.clip(block_idx, 0, nb - 1)
+    kblk = k.reshape(b, hkv, nb, block_size, dh)
+    vblk = v.reshape(b, hkv, nb, block_size, dh)
+    kg = jnp.take_along_axis(kblk, idx[..., None, None].repeat(block_size, -2)
+                             .repeat(dh, -1), axis=2)           # [B,H,kb,Bs,dh]
+    vg = jnp.take_along_axis(vblk, idx[..., None, None].repeat(block_size, -2)
+                             .repeat(dh, -1), axis=2)
+    kg = kg.reshape(b, hkv, kb * block_size, dh).astype(jnp.float32)
+    vg = vg.reshape(b, hkv, kb * block_size, dh).astype(jnp.float32)
+    scores = jnp.einsum("bhgd,bhsd->bhgs", q.astype(jnp.float32), kg)
+    scores = scores / (dh ** 0.5)
+    mask = jnp.repeat(valid.astype(bool), block_size, axis=-1)   # [B,H,kb*Bs]
+    scores = jnp.where(mask[:, :, None, :], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhgs,bhsd->bhgd", w, vg).astype(q.dtype)

@@ -1,0 +1,86 @@
+"""ShapeDtypeStruct stand-ins for every model input (no allocation).
+
+The four assigned input shapes; decode shapes lower ``serve_step`` (one
+new token against a seq_len KV cache), train/prefill lower full-sequence
+programs.  ``[vlm]``/``[audio]`` archs get precomputed frontend
+embeddings per the carve-out (DESIGN §4).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import Rules
+from repro.models.config import ModelConfig
+from repro.models.transformer import abstract_cache
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    kind: str          # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES = {
+    "train_4k": InputShape("train_4k", "train", 4096, 256),
+    "prefill_32k": InputShape("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": InputShape("decode_32k", "decode", 32768, 128),
+    "long_500k": InputShape("long_500k", "decode", 524288, 1),
+}
+
+
+def _tok(rules: Rules, shape, dtype=jnp.int32, axes=("batch", "seq")):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=rules.sharding(axes))
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape, rules: Rules) -> dict:
+    """Abstract inputs for the step function of this (arch, shape)."""
+    b, s = shape.global_batch, shape.seq_len
+    f = cfg.frontend_tokens if cfg.frontend else 0
+    if shape.kind == "train":
+        out = {"tokens": _tok(rules, (b, s - f)),
+               "labels": _tok(rules, (b, s - f))}
+        if f:
+            out["embeds"] = jax.ShapeDtypeStruct(
+                (b, f, cfg.d_model), jnp.float32,
+                sharding=rules.sharding(("batch", "seq", "act_embed")))
+        return out
+    if shape.kind == "prefill":
+        out = {"tokens": _tok(rules, (b, s - f))}
+        if f:
+            out["embeds"] = jax.ShapeDtypeStruct(
+                (b, f, cfg.d_model), jnp.float32,
+                sharding=rules.sharding(("batch", "seq", "act_embed")))
+        return out
+    if shape.kind == "decode":
+        return {
+            "cache": abstract_cache(cfg, b, s, rules),
+            "token": jax.ShapeDtypeStruct((b,), jnp.int32,
+                                          sharding=rules.sharding(("batch",))),
+            "pos": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+    raise ValueError(shape.kind)
+
+
+def concrete_inputs(cfg: ModelConfig, shape: InputShape, rng=None) -> dict:
+    """Small-scale concrete inputs (smoke tests; reduced configs only)."""
+    from repro.models.transformer import zero_cache
+    rng = rng if rng is not None else jax.random.PRNGKey(0)
+    b, s = shape.global_batch, shape.seq_len
+    f = cfg.frontend_tokens if cfg.frontend else 0
+    if shape.kind in ("train", "prefill"):
+        toks = jax.random.randint(rng, (b, s - f), 0, cfg.vocab_size, jnp.int32)
+        out = {"tokens": toks}
+        if shape.kind == "train":
+            out["labels"] = jnp.roll(toks, -1, axis=1)
+        if f:
+            out["embeds"] = jax.random.normal(rng, (b, f, cfg.d_model),
+                                              jnp.float32) * 0.02
+        return out
+    return {"cache": zero_cache(cfg, b, s),
+            "token": jnp.zeros((b,), jnp.int32),
+            "pos": jnp.asarray(s - 1, jnp.int32)}

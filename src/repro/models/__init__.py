@@ -1,0 +1,13 @@
+"""Model zoo: composable dense/MoE/SSM/hybrid decoder + modality stubs."""
+from repro.models.config import ModelConfig
+from repro.models.module import (ParamSpec, abstract_params, init_params,
+                                 param_count, param_shardings)
+from repro.models.transformer import (abstract_cache, cache_specs,
+                                      decode_step, loss_fn, model_specs,
+                                      prefill, zero_cache)
+
+__all__ = [
+    "ModelConfig", "ParamSpec", "abstract_params", "init_params",
+    "param_count", "param_shardings", "abstract_cache", "cache_specs",
+    "decode_step", "loss_fn", "model_specs", "prefill", "zero_cache",
+]

@@ -1,0 +1,261 @@
+"""Shared transformer layers: RMSNorm, RoPE, GQA attention (flash-style
+chunked for train/prefill, split-S merged for decode, golden block-sparse
+for long contexts), SwiGLU MLP.
+
+All attention paths use the same online-softmax algebra as
+``repro.core.streaming`` — the paper's unbiased streaming softmax is one
+mechanism reused for (a) the dataset posterior and (b) the KV-cache
+posterior (DESIGN §4).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+from repro.models.module import ParamSpec
+
+Array = jnp.ndarray
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# basics
+# ---------------------------------------------------------------------------
+
+def rmsnorm_spec(dim: int) -> ParamSpec:
+    return ParamSpec((dim,), (None,), jnp.float32, "ones")
+
+
+def rmsnorm(w: Array, x: Array, eps: float = 1e-6) -> Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, -1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * w).astype(x.dtype)
+
+
+def rope(x: Array, positions: Array, theta: float) -> Array:
+    """x: [..., S, H, dh]; positions: broadcastable to [..., S]."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq      # [..., S, half]
+    cos = jnp.cos(ang)[..., None, :]                            # [..., S, 1, half]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    return jnp.concatenate([x1 * cos - x2 * sin,
+                            x1 * sin + x2 * cos], -1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# dense MLP (SwiGLU)
+# ---------------------------------------------------------------------------
+
+def mlp_specs(d_model: int, d_ff: int, dtype) -> dict:
+    return {
+        "w_gate": ParamSpec((d_model, d_ff), ("embed", "mlp"), dtype),
+        "w_up": ParamSpec((d_model, d_ff), ("embed", "mlp"), dtype),
+        "w_down": ParamSpec((d_ff, d_model), ("mlp", "embed"), dtype),
+    }
+
+
+def mlp_apply(p: dict, x: Array) -> Array:
+    h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+    h = shard(h, "batch", "seq", "act_mlp")
+    return h @ p["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# GQA attention
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AttnDims:
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+
+    @property
+    def q_per_kv(self) -> int:
+        return self.num_heads // self.num_kv_heads
+
+
+def attn_specs(d_model: int, dims: AttnDims, dtype, qkv_bias: bool) -> dict:
+    # Weights keep the (heads * head_dim) axis FLAT so the model-axis
+    # sharding divides evenly even when num_heads doesn't (e.g. 40 q heads
+    # over model=16: 40*128 = 5120 divides; 40 does not).
+    h, kv, dh = dims.num_heads, dims.num_kv_heads, dims.head_dim
+    sp = {
+        "wq": ParamSpec((d_model, h * dh), ("embed", "heads"), dtype),
+        "wk": ParamSpec((d_model, kv * dh), ("embed", "kv_heads"), dtype),
+        "wv": ParamSpec((d_model, kv * dh), ("embed", "kv_heads"), dtype),
+        "wo": ParamSpec((h * dh, d_model), ("heads", "embed"), dtype),
+    }
+    if qkv_bias:
+        sp["bq"] = ParamSpec((h * dh,), ("heads",), dtype, "zeros")
+        sp["bk"] = ParamSpec((kv * dh,), ("kv_heads",), dtype, "zeros")
+        sp["bv"] = ParamSpec((kv * dh,), ("kv_heads",), dtype, "zeros")
+    return sp
+
+
+def qkv_proj(p: dict, x: Array, dims: AttnDims, positions: Array,
+             rope_theta: float) -> tuple[Array, Array, Array]:
+    b, s = x.shape[:2]
+    h, kv, dh = dims.num_heads, dims.num_kv_heads, dims.head_dim
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if "bq" in p:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    q = q.reshape(b, s, h, dh)
+    k = k.reshape(b, s, kv, dh)
+    v = v.reshape(b, s, kv, dh)
+    if rope_theta > 0:
+        q = rope(q, positions, rope_theta)
+        k = rope(k, positions, rope_theta)
+    return q, k, v
+
+
+def flash_attention(q: Array, k: Array, v: Array, dims: AttnDims,
+                    causal: bool = True, q_chunk: int = 512,
+                    kv_chunk: int = 1024) -> Array:
+    """Memory-efficient causal attention (pure JAX, double lax.scan).
+
+    q: [B, S, H, dh]; k/v: [B, S, Hkv, dh] -> [B, S, H, dh].
+    Online softmax keeps the working set at O(q_chunk * kv_chunk).
+    """
+    b, s, h, dh = q.shape
+    g = dims.q_per_kv
+    hkv = dims.num_kv_heads
+    scale = dh ** -0.5
+    q_chunk = min(q_chunk, s)
+    kv_chunk = min(kv_chunk, s)
+    assert s % q_chunk == 0 and s % kv_chunk == 0
+    nq, nk = s // q_chunk, s // kv_chunk
+
+    # [B, Hkv, G, nq, qc, dh] / [B, Hkv, nk, kc, dh]
+    qr = q.reshape(b, s, hkv, g, dh).transpose(0, 2, 3, 1, 4)
+    qr = qr.reshape(b, hkv, g, nq, q_chunk, dh)
+    kr = k.transpose(0, 2, 1, 3).reshape(b, hkv, nk, kv_chunk, dh)
+    vr = v.transpose(0, 2, 1, 3).reshape(b, hkv, nk, kv_chunk, dh)
+
+    def q_block(qi, qc_data):
+        def kv_block(carry, ki):
+            m, l, acc = carry
+            kc = kr[:, :, ki]
+            vc = vr[:, :, ki]
+            s_ = jnp.einsum("bhgqd,bhkd->bhgqk", qc_data.astype(jnp.float32),
+                            kc.astype(jnp.float32)) * scale
+            if causal:
+                qpos = qi * q_chunk + jnp.arange(q_chunk)
+                kpos = ki * kv_chunk + jnp.arange(kv_chunk)
+                mask = qpos[:, None] >= kpos[None, :]
+                s_ = jnp.where(mask, s_, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s_, -1))
+            p_ = jnp.exp(s_ - m_new[..., None])
+            sc = jnp.exp(m - m_new)
+            l_new = l * sc + jnp.sum(p_, -1)
+            acc_new = acc * sc[..., None] + jnp.einsum(
+                "bhgqk,bhkd->bhgqd", p_, vc.astype(jnp.float32))
+            return (m_new, l_new, acc_new), None
+
+        init = (jnp.full((b, hkv, g, q_chunk), NEG_INF, jnp.float32),
+                jnp.zeros((b, hkv, g, q_chunk), jnp.float32),
+                jnp.zeros((b, hkv, g, q_chunk, dh), jnp.float32))
+        # causal: kv blocks after this q block contribute nothing; still
+        # scanned (masked) — structural simplicity over FLOP savings; the
+        # perf pass (§Perf) revisits this.
+        (m, l, acc), _ = jax.lax.scan(kv_block, init, jnp.arange(nk))
+        return acc / jnp.maximum(l, 1e-30)[..., None]
+
+    out = jax.lax.map(lambda qi: q_block(qi, qr[:, :, :, qi]), jnp.arange(nq))
+    # out: [nq, B, Hkv, G, qc, dh] -> [B, S, H, dh]
+    out = out.transpose(1, 2, 3, 0, 4, 5).reshape(b, hkv, g, s, dh)
+    return out.transpose(0, 3, 1, 2, 4).reshape(b, s, h, dh).astype(q.dtype)
+
+
+def decode_attention_local(q: Array, k: Array, v: Array, length_mask: Array,
+                           ) -> tuple[Array, Array, Array]:
+    """Single-token attention partials over a (possibly local) KV shard.
+
+    q: [B, Hkv, G, dh]; k/v: [B, Hkv, S, dh]; length_mask: [B, S] bool.
+    Returns the online-softmax partial (m, l, acc) so callers can merge
+    across KV shards (flash-decoding split-S).
+    """
+    dh = q.shape[-1]
+    s_ = jnp.einsum("bhgd,bhsd->bhgs", q.astype(jnp.float32),
+                    k.astype(jnp.float32)) * dh ** -0.5
+    s_ = jnp.where(length_mask[:, None, None, :], s_, NEG_INF)
+    m = jnp.max(s_, -1)
+    p = jnp.exp(s_ - m[..., None])
+    l = jnp.sum(p, -1)
+    acc = jnp.einsum("bhgs,bhsd->bhgd", p, v.astype(jnp.float32))
+    return m, l, acc
+
+
+def merge_partials_psum(m: Array, l: Array, acc: Array,
+                        axis_names) -> Array:
+    """Exact LSE merge of decode partials across mesh axes (inside shard_map)."""
+    m_g = jax.lax.pmax(m, axis_names)
+    sc = jnp.exp(m - m_g)
+    l_g = jax.lax.psum(l * sc, axis_names)
+    acc_g = jax.lax.psum(acc * sc[..., None], axis_names)
+    return acc_g / jnp.maximum(l_g, 1e-30)[..., None]
+
+
+def block_summaries(k: Array, length_mask: Array, block_size: int) -> Array:
+    """Masked mean-pooled key blocks: [B,Hkv,S,dh] -> [B,Hkv,nb,dh]."""
+    b, hkv, s, dh = k.shape
+    nb = s // block_size
+    lm = length_mask.reshape(b, nb, block_size)
+    cnt = jnp.maximum(jnp.sum(lm, -1), 1)[:, None, :, None]
+    return ((k.reshape(b, hkv, nb, block_size, dh)
+             * lm[:, None, :, :, None]).sum(3) / cnt).astype(k.dtype)
+
+
+def golden_decode_partials(q: Array, k: Array, v: Array, length_mask: Array,
+                           num_blocks: int, block_size: int,
+                           summaries: Array | None = None
+                           ) -> tuple[Array, Array, Array]:
+    """Golden attention (paper Sec. 3.4 on the KV cache): coarse-screen
+    block summaries, then exact partials over the top-k golden blocks only.
+
+    Shapes as in decode_attention_local; returns mergeable partials.
+    When ``summaries`` (cached, incrementally updated) is given, the O(S)
+    re-pooling is skipped — per-step proxy work is O(S/block) (§Perf).
+    """
+    b, hkv, g, dh = q.shape
+    s = k.shape[2]
+    nb = s // block_size
+    kb = min(num_blocks, nb)
+    lm = length_mask.reshape(b, nb, block_size)
+    summ = (block_summaries(k, length_mask, block_size)
+            if summaries is None else summaries)                # [B,Hkv,nb,dh]
+    qbar = q.mean(2)
+    scores = jnp.einsum("bhd,bhnd->bhn", qbar.astype(jnp.float32),
+                        summ.astype(jnp.float32))
+    scores = jnp.where(jnp.any(lm, -1)[:, None, :], scores, NEG_INF)
+    _, idx = jax.lax.top_k(scores, kb)                          # [B,Hkv,kb]
+    # gather golden blocks
+    kblk = k.reshape(b, hkv, nb, block_size, dh)
+    vblk = v.reshape(b, hkv, nb, block_size, dh)
+    take = idx[..., None, None]
+    kg = jnp.take_along_axis(kblk, jnp.broadcast_to(
+        take, (b, hkv, kb, block_size, dh)), axis=2)
+    vg = jnp.take_along_axis(vblk, jnp.broadcast_to(
+        take, (b, hkv, kb, block_size, dh)), axis=2)
+    mg = jnp.take_along_axis(lm[:, None].repeat(hkv, 1), jnp.broadcast_to(
+        idx[..., None], (b, hkv, kb, block_size)), axis=2)
+    s_ = jnp.einsum("bhgd,bhkcd->bhgkc", q.astype(jnp.float32),
+                    kg.astype(jnp.float32)) * dh ** -0.5
+    s_ = jnp.where(mg[:, :, None], s_, NEG_INF).reshape(b, hkv, g, kb * block_size)
+    m = jnp.max(s_, -1)
+    p = jnp.exp(s_ - m[..., None]).reshape(b, hkv, g, kb, block_size)
+    l = jnp.sum(p, (-1, -2))
+    acc = jnp.einsum("bhgkc,bhkcd->bhgd", p, vg.astype(jnp.float32))
+    return m, l, acc

@@ -1,0 +1,198 @@
+"""Mamba-2 (SSD, state-space duality — arXiv:2405.21060) in pure JAX.
+
+TPU adaptation (DESIGN §3): the chunked SSD form turns the selective-scan
+into MXU-friendly per-chunk matmuls (intra-chunk "attention-like" block +
+inter-chunk recurrence carried by ``lax.scan``), instead of the CUDA
+parallel-scan kernels of the original.  Chunk length defaults to 128 so
+the intra-chunk matrices are MXU-aligned.
+
+Layout: d_inner = expand * d_model, H = d_inner / head_dim heads,
+state size N, single B/C group.  Decode keeps (conv_state, ssm_state)
+caches and costs O(1) per token — the attention-free arch runs
+``long_500k`` natively (DESIGN §4).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+from repro.models.module import ParamSpec
+
+Array = jnp.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class MambaDims:
+    d_model: int
+    d_inner: int
+    head_dim: int
+    state: int
+    conv_width: int = 4
+
+    @property
+    def heads(self) -> int:
+        return self.d_inner // self.head_dim
+
+    @property
+    def conv_dim(self) -> int:
+        return self.d_inner + 2 * self.state  # x, B, C share the conv
+
+    @property
+    def proj_dim(self) -> int:
+        # z, x, B, C, dt
+        return 2 * self.d_inner + 2 * self.state + self.heads
+
+
+def mamba_specs(dims: MambaDims, dtype) -> dict:
+    # z / xBC / dt projections are SEPARATE weights so each output dim
+    # shards evenly over the model axis (the fused proj_dim generally
+    # doesn't divide: 2*d_inner + 2N + H is odd-sized).
+    return {
+        "in_z": ParamSpec((dims.d_model, dims.d_inner),
+                          ("embed", "mamba_inner"), dtype),
+        "in_xbc": ParamSpec((dims.d_model, dims.conv_dim),
+                            ("embed", "mamba_conv"), dtype),
+        "in_dt": ParamSpec((dims.d_model, dims.heads),
+                           ("embed", "mamba_heads"), dtype),
+        "conv_w": ParamSpec((dims.conv_width, dims.conv_dim),
+                            (None, "mamba_conv"), dtype, scale=0.5),
+        "conv_b": ParamSpec((dims.conv_dim,), ("mamba_conv",), dtype, "zeros"),
+        "a_log": ParamSpec((dims.heads,), ("mamba_heads",), jnp.float32, "arange"),
+        "dt_bias": ParamSpec((dims.heads,), ("mamba_heads",), jnp.float32, "zeros"),
+        "d_skip": ParamSpec((dims.heads,), ("mamba_heads",), jnp.float32, "ones"),
+        "norm_w": ParamSpec((dims.d_inner,), ("mamba_inner",), jnp.float32, "ones"),
+        "out_proj": ParamSpec((dims.d_inner, dims.d_model),
+                              ("mamba_inner", "embed"), dtype),
+    }
+
+
+def _in_proj(p: dict, x: Array):
+    return x @ p["in_z"], x @ p["in_xbc"], x @ p["in_dt"]
+
+
+def _gated_norm(w: Array, x: Array, z: Array, eps: float = 1e-6) -> Array:
+    xf = (x * jax.nn.silu(z)).astype(jnp.float32)
+    var = jnp.mean(xf * xf, -1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * w).astype(x.dtype)
+
+
+def _causal_conv(xbc: Array, w: Array, b: Array) -> Array:
+    """Depthwise causal conv over seq.  xbc: [B, S, C]; w: [W, C]."""
+    width = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (width - 1, 0), (0, 0)))
+    out = sum(pad[:, i: i + xbc.shape[1], :] * w[i] for i in range(width))
+    return jax.nn.silu(out + b)
+
+
+def ssd_chunked(x: Array, dt: Array, a: Array, b_in: Array, c_in: Array,
+                d_skip: Array, chunk: int = 128,
+                init_state: Array | None = None
+                ) -> tuple[Array, Array]:
+    """Chunked SSD scan.
+
+    x: [B, S, H, P]; dt: [B, S, H] (post-softplus); a: [H] (negative);
+    b_in/c_in: [B, S, N]; d_skip: [H].
+    Returns (y: [B, S, H, P], final_state: [B, H, P, N]).
+    """
+    bsz, s, h, p = x.shape
+    n = b_in.shape[-1]
+    chunk = min(chunk, s)
+    assert s % chunk == 0
+    nc = s // chunk
+
+    xr = x.reshape(bsz, nc, chunk, h, p)
+    dtr = dt.reshape(bsz, nc, chunk, h)
+    br = b_in.reshape(bsz, nc, chunk, n)
+    cr = c_in.reshape(bsz, nc, chunk, n)
+    adt = dtr * a                                       # [B,nc,L,H] (<= 0)
+    cum = jnp.cumsum(adt, axis=2)                       # within-chunk cumsum
+
+    state0 = (jnp.zeros((bsz, h, p, n), jnp.float32)
+              if init_state is None else init_state.astype(jnp.float32))
+
+    @jax.checkpoint
+    def chunk_body(state, ci):
+        # rematerialized per chunk: the intra-chunk [B,L,L,H] attention-like
+        # tensors would otherwise all be saved for backward (observed 74
+        # GiB/chip on jamba's 1-period probe); with remat only the [B,H,P,N]
+        # carry per chunk persists.
+        xc = xr[:, ci].astype(jnp.float32)              # [B,L,H,P]
+        dtc = dtr[:, ci]
+        bc = br[:, ci].astype(jnp.float32)              # [B,L,N]
+        cc = cr[:, ci].astype(jnp.float32)
+        cumc = cum[:, ci]                               # [B,L,H]
+        # intra-chunk: att[b,h,i,j] = (c_i . b_j) exp(cum_i - cum_j) dt_j, j<=i
+        seg = cumc[:, :, None, :] - cumc[:, None, :, :]  # [B,i,j,H]
+        causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+        att = jnp.einsum("bin,bjn->bij", cc, bc)[..., None] \
+            * jnp.exp(jnp.where(causal[None, :, :, None], seg, -jnp.inf)) \
+            * dtc[:, None, :, :]                         # [B,i,j,H]
+        y_intra = jnp.einsum("bijh,bjhp->bihp", att, xc)
+        # inter-chunk: y_i += (c_i exp(cum_i)) . state
+        y_inter = jnp.einsum("bin,bih,bhpn->bihp", cc, jnp.exp(cumc), state)
+        # state update: state' = exp(cum_L) state + sum_j exp(cum_L - cum_j) dt_j b_j x_j
+        decay_all = jnp.exp(cumc[:, -1])                 # [B,H]
+        w_j = jnp.exp(cumc[:, -1, None, :] - cumc) * dtc  # [B,L,H]
+        state_add = jnp.einsum("bjh,bjn,bjhp->bhpn", w_j, bc, xc)
+        state_new = state * decay_all[:, :, None, None] + state_add
+        return state_new, (y_intra + y_inter).astype(x.dtype)
+
+    state, ys = jax.lax.scan(chunk_body, state0, jnp.arange(nc))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(bsz, s, h, p)
+    y = y + (d_skip[None, None, :, None] * x.astype(jnp.float32)).astype(x.dtype)
+    return y, state
+
+
+def mamba_apply(p: dict, x: Array, dims: MambaDims, chunk: int = 128) -> Array:
+    """Full-sequence (train / prefill) mixer.  x: [B, S, d_model]."""
+    z, xbc, dt = _in_proj(p, x)
+    z = shard(z, "batch", "seq", "act_mlp")
+    xbc = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+    xs = xbc[..., : dims.d_inner]
+    b_in = xbc[..., dims.d_inner: dims.d_inner + dims.state]
+    c_in = xbc[..., dims.d_inner + dims.state:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])
+    bsz, s = x.shape[:2]
+    xh = xs.reshape(bsz, s, dims.heads, dims.head_dim)
+    y, _ = ssd_chunked(xh, dt, a, b_in, c_in, p["d_skip"], chunk)
+    y = y.reshape(bsz, s, dims.d_inner)
+    y = _gated_norm(p["norm_w"], y, z)
+    return y @ p["out_proj"]
+
+
+def mamba_decode_step(p: dict, x: Array, cache: dict, dims: MambaDims
+                      ) -> tuple[Array, dict]:
+    """One-token decode.  x: [B, d_model]; cache: {conv: [B,W-1,C], ssm: [B,H,P,N]}."""
+    z, xbc, dt = _in_proj(p, x)
+    conv_in = jnp.concatenate([cache["conv"], xbc[:, None, :]], 1)  # [B,W,C]
+    xbc_c = jax.nn.silu(jnp.einsum("bwc,wc->bc", conv_in, p["conv_w"])
+                        + p["conv_b"])
+    new_conv = conv_in[:, 1:]
+    xs = xbc_c[..., : dims.d_inner]
+    b_in = xbc_c[..., dims.d_inner: dims.d_inner + dims.state].astype(jnp.float32)
+    c_in = xbc_c[..., dims.d_inner + dims.state:].astype(jnp.float32)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])      # [B,H]
+    a = -jnp.exp(p["a_log"])
+    decay = jnp.exp(dt * a)                                          # [B,H]
+    xh = xs.reshape(x.shape[0], dims.heads, dims.head_dim).astype(jnp.float32)
+    add = jnp.einsum("bh,bn,bhp->bhpn", dt, b_in, xh)
+    ssm = cache["ssm"].astype(jnp.float32) * decay[..., None, None] + add
+    y = jnp.einsum("bn,bhpn->bhp", c_in, ssm)
+    y = y + p["d_skip"][None, :, None] * xh
+    y = y.reshape(x.shape[0], dims.d_inner).astype(x.dtype)
+    y = _gated_norm(p["norm_w"], y, z)
+    return y @ p["out_proj"], {"conv": new_conv, "ssm": ssm.astype(cache["ssm"].dtype)}
+
+
+def mamba_cache_specs(dims: MambaDims, batch: int, dtype):
+    """Abstract cache shapes (+logical axes) for one mamba layer."""
+    return {
+        "conv": (((batch, dims.conv_width - 1, dims.conv_dim),
+                  ("batch", None, "mamba_conv")), dtype),
+        "ssm": (((batch, dims.heads, dims.head_dim, dims.state),
+                 ("batch", "mamba_heads", None, None)), jnp.float32),
+    }

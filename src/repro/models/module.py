@@ -1,0 +1,90 @@
+"""Minimal functional parameter system (flax is not installed; pure JAX).
+
+A model definition is a pytree of ``ParamSpec`` leaves; ``init_params``
+materializes it, ``abstract_params`` produces sharded
+``ShapeDtypeStruct``s for ``.lower()`` dry-runs without ever allocating,
+and ``param_shardings`` yields the matching ``NamedSharding`` tree for
+``jax.jit(in_shardings=...)``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.sharding import Rules
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple[int, ...]
+    logical_axes: tuple[str | None, ...]
+    dtype: Any = jnp.bfloat16
+    init: str = "normal"          # normal | zeros | ones | embed | mamba_a | arange
+    scale: float | None = None    # stddev override for "normal"
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.logical_axes), \
+            f"{self.shape} vs {self.logical_axes}"
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def tree_specs(tree):
+    return jax.tree.leaves(tree, is_leaf=_is_spec), \
+        jax.tree.structure(tree, is_leaf=_is_spec)
+
+
+def _init_leaf(spec: ParamSpec, key: jax.Array) -> jax.Array:
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, spec.dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, spec.dtype)
+    if spec.init == "arange":  # e.g. Mamba A_log init: log(1..n)
+        n = spec.shape[-1]
+        v = jnp.log(jnp.arange(1, n + 1, dtype=jnp.float32))
+        return jnp.broadcast_to(v, spec.shape).astype(spec.dtype)
+    fan_in = spec.shape[-2] if len(spec.shape) >= 2 else spec.shape[-1]
+    std = spec.scale if spec.scale is not None else 1.0 / math.sqrt(fan_in)
+    if spec.init == "embed":
+        std = spec.scale if spec.scale is not None else 1.0
+    return (std * jax.random.normal(key, spec.shape, jnp.float32)).astype(spec.dtype)
+
+
+def init_params(spec_tree, rng: jax.Array):
+    leaves, treedef = tree_specs(spec_tree)
+    keys = jax.random.split(rng, len(leaves))
+    vals = [_init_leaf(s, k) for s, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def abstract_params(spec_tree, rules: Rules):
+    """ShapeDtypeStruct tree with shardings attached (dry-run input)."""
+    def mk(s: ParamSpec):
+        sh = rules.sharding(s.logical_axes, s.shape)
+        return jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh)
+    return jax.tree.map(mk, spec_tree, is_leaf=_is_spec)
+
+
+def param_shardings(spec_tree, rules: Rules):
+    return jax.tree.map(lambda s: rules.sharding(s.logical_axes, s.shape),
+                        spec_tree, is_leaf=_is_spec)
+
+
+def param_count(spec_tree) -> int:
+    leaves, _ = tree_specs(spec_tree)
+    return int(sum(np.prod(s.shape) for s in leaves))
+
+
+def stack_specs(spec_tree, repeats: int):
+    """Add a leading 'layers' axis to every leaf (scan-over-layers)."""
+    def mk(s: ParamSpec):
+        return ParamSpec((repeats,) + s.shape, ("layers",) + s.logical_axes,
+                         s.dtype, s.init, s.scale)
+    return jax.tree.map(mk, spec_tree, is_leaf=_is_spec)

@@ -1,0 +1,464 @@
+"""Composable decoder: dense / MoE / Mamba2 / hybrid blocks, scan-over-layers.
+
+Execution modes:
+  * train    — full-sequence forward, causal flash attention, remat per
+               block, scan over layer repeats (HLO size O(1) in depth).
+  * prefill  — same forward, additionally materializes the KV/SSM caches.
+  * decode   — one new token against a seq_len cache (the serve_step the
+               decode_32k / long_500k dry-run shapes lower).  Attention
+               uses flash-decoding (split-S LSE merge over the mesh axes
+               holding the cache) or *golden attention* — the paper's
+               coarse-to-fine subset selection on the KV cache.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import current_rules, mesh_axis_size, shard
+from repro.models import layers as L
+from repro.models import mamba2, moe
+from repro.models.config import ModelConfig
+from repro.models.module import ParamSpec, stack_specs
+
+Array = jnp.ndarray
+
+
+# ---------------------------------------------------------------------------
+# parameter specs
+# ---------------------------------------------------------------------------
+
+def _attn_dims(cfg: ModelConfig) -> L.AttnDims:
+    return L.AttnDims(cfg.num_heads, cfg.num_kv_heads, cfg.hdim)
+
+
+def _mamba_dims(cfg: ModelConfig) -> mamba2.MambaDims:
+    return mamba2.MambaDims(cfg.d_model, cfg.ssm_expand * cfg.d_model,
+                            cfg.ssm_head_dim, cfg.ssm_state, cfg.ssm_conv)
+
+
+def _layer_specs(cfg: ModelConfig, i: int) -> dict:
+    dt = cfg.param_dtype
+    sp: dict[str, Any] = {"ln1": L.rmsnorm_spec(cfg.d_model),
+                          "ln2": L.rmsnorm_spec(cfg.d_model)}
+    if cfg.mixer_kind(i) == "A":
+        sp["attn"] = L.attn_specs(cfg.d_model, _attn_dims(cfg), dt, cfg.qkv_bias)
+    else:
+        sp["mamba"] = mamba2.mamba_specs(_mamba_dims(cfg), dt)
+    kind = cfg.mlp_kind(i)
+    if kind == "moe":
+        sp["moe"] = moe.moe_specs(cfg.d_model, cfg.d_ff, cfg.num_experts, dt)
+    elif kind == "dense":
+        sp["mlp"] = L.mlp_specs(cfg.d_model, cfg.d_ff, dt)
+    else:
+        del sp["ln2"]
+    return sp
+
+
+def model_specs(cfg: ModelConfig) -> dict:
+    dt = cfg.param_dtype
+    period = {f"l{i}": _layer_specs(cfg, i) for i in range(cfg.period)}
+    sp = {
+        "embed": ParamSpec((cfg.padded_vocab, cfg.d_model), ("vocab", "embed"),
+                           dt, "embed", scale=0.02),
+        "blocks": stack_specs(period, cfg.repeats),
+        "final_norm": L.rmsnorm_spec(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        sp["lm_head"] = ParamSpec((cfg.d_model, cfg.padded_vocab),
+                                  ("embed", "vocab"), dt, scale=0.02)
+    return sp
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+
+def cache_specs(cfg: ModelConfig, batch: int, seq_len: int) -> dict:
+    """Abstract (shape, logical_axes, dtype) tree for the decode cache."""
+    dt = cfg.param_dtype
+    out = {}
+    for i in range(cfg.period):
+        if cfg.mixer_kind(i) == "A":
+            shp = (cfg.repeats, batch, cfg.num_kv_heads, seq_len, cfg.hdim)
+            ax = ("layers", "batch", "cache_heads", "kv_seq", None)
+            out[f"l{i}"] = {"k": (shp, ax, dt), "v": (shp, ax, dt)}
+            if (cfg.attn_kind_decode == "golden"
+                    and cfg.golden_cached_summaries):
+                nb = seq_len // cfg.golden_block_size
+                out[f"l{i}"]["summ"] = (
+                    (cfg.repeats, batch, cfg.num_kv_heads, nb, cfg.hdim),
+                    ("layers", "batch", "cache_heads", "kv_seq", None), dt)
+        else:
+            d = _mamba_dims(cfg)
+            out[f"l{i}"] = {
+                "conv": ((cfg.repeats, batch, d.conv_width - 1, d.conv_dim),
+                         ("layers", "batch", None, "mamba_conv"), dt),
+                "ssm": ((cfg.repeats, batch, d.heads, d.head_dim, d.state),
+                        ("layers", "batch", "mamba_heads", None, None),
+                        jnp.float32),
+            }
+    return out
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, seq_len: int, rules):
+    def mk(leaf):
+        shp, ax, dt = leaf
+        return jax.ShapeDtypeStruct(shp, dt, sharding=rules.sharding(ax, shp))
+    return jax.tree.map(mk, cache_specs(cfg, batch, seq_len),
+                        is_leaf=lambda x: isinstance(x, tuple) and len(x) == 3
+                        and isinstance(x[0], tuple))
+
+
+def zero_cache(cfg: ModelConfig, batch: int, seq_len: int):
+    def mk(leaf):
+        shp, ax, dt = leaf
+        return jnp.zeros(shp, dt)
+    return jax.tree.map(mk, cache_specs(cfg, batch, seq_len),
+                        is_leaf=lambda x: isinstance(x, tuple) and len(x) == 3
+                        and isinstance(x[0], tuple))
+
+
+# ---------------------------------------------------------------------------
+# attention paths
+# ---------------------------------------------------------------------------
+
+def _kv_axes(rules) -> tuple[str, ...]:
+    if rules.mesh is None:
+        return ()
+    m = rules.table.get("kv_seq")
+    if m is None:
+        return ()
+    ms = (m,) if isinstance(m, str) else tuple(m)
+    return tuple(a for a in ms if a in rules.mesh.axis_names)
+
+
+def _decode_attention(cfg: ModelConfig, q: Array, kc: Array, vc: Array,
+                      mask: Array, summ: Array | None = None) -> Array:
+    """q: [B, Hkv, G, dh]; kc/vc: [B, Hkv, S, dh]; mask: [B, S] -> [B,Hkv,G,dh]."""
+    rules = current_rules()
+    kv_axes = _kv_axes(rules)
+
+    def local(qq, kk, vv, mm, ss):
+        if cfg.attn_kind_decode == "golden":
+            nsh = mesh_axis_size(*kv_axes) if kv_axes else 1
+            kb = max(1, cfg.golden_blocks // nsh)
+            m, l, acc = L.golden_decode_partials(qq, kk, vv, mm, kb,
+                                                 cfg.golden_block_size,
+                                                 summaries=ss)
+        else:
+            m, l, acc = L.decode_attention_local(qq, kk, vv, mm)
+        if kv_axes:
+            return L.merge_partials_psum(m, l, acc, kv_axes)
+        return acc / jnp.maximum(l, 1e-30)[..., None]
+
+    if not kv_axes:
+        return local(q, kc, vc, mask, summ).astype(q.dtype)
+
+    P = jax.sharding.PartitionSpec
+    batch = rules.table.get("batch")
+    kv = rules.table.get("kv_seq")
+    in_specs = [P(batch, None, None, None), P(batch, None, kv, None),
+                P(batch, None, kv, None), P(batch, kv)]
+    args = [q, kc, vc, mask]
+    if summ is not None:
+        in_specs.append(P(batch, None, kv, None))
+        args.append(summ)
+        fn = local
+    else:
+        fn = lambda qq, kk, vv, mm: local(qq, kk, vv, mm, None)
+    out = jax.shard_map(
+        fn, mesh=rules.mesh,
+        in_specs=tuple(in_specs),
+        out_specs=P(batch, None, None, None),
+        check_vma=False,
+    )(*args)
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# block application
+# ---------------------------------------------------------------------------
+
+def _apply_mixer_full(cfg: ModelConfig, i: int, p: dict, x: Array,
+                      positions: Array, want_cache: bool):
+    """Train/prefill mixer.  Returns (y, cache_entry | None)."""
+    if cfg.mixer_kind(i) == "A":
+        dims = _attn_dims(cfg)
+        q, k, v = L.qkv_proj(p["attn"], x, dims, positions, cfg.rope_theta)
+        q = shard(q, "batch", "seq", "act_heads", None)
+        o = L.flash_attention(q, k, v, dims, q_chunk=cfg.attn_q_chunk,
+                              kv_chunk=cfg.attn_kv_chunk)
+        b, s = o.shape[:2]
+        y = o.reshape(b, s, -1) @ p["attn"]["wo"]
+        cache = None
+        if want_cache:
+            kc = k.transpose(0, 2, 1, 3)
+            cache = {"k": kc, "v": v.transpose(0, 2, 1, 3)}
+            if (cfg.attn_kind_decode == "golden"
+                    and cfg.golden_cached_summaries):
+                full = jnp.ones(kc.shape[:1] + kc.shape[2:3], bool)
+                cache["summ"] = L.block_summaries(kc, full,
+                                                  cfg.golden_block_size)
+        return y, cache
+    y = mamba2.mamba_apply(p["mamba"], x, _mamba_dims(cfg), cfg.ssm_chunk)
+    cache = None
+    if want_cache:
+        # prefill -> decode handoff: rerun tail for conv state, final ssm state
+        d = _mamba_dims(cfg)
+        _, xbc, dt = mamba2._in_proj(p["mamba"], x)
+        conv = xbc[:, -(d.conv_width - 1):, :]
+        xbc_c = mamba2._causal_conv(xbc, p["mamba"]["conv_w"],
+                                    p["mamba"]["conv_b"])
+        xs = xbc_c[..., : d.d_inner]
+        b_in = xbc_c[..., d.d_inner: d.d_inner + d.state]
+        c_in = xbc_c[..., d.d_inner + d.state:]
+        dtv = jax.nn.softplus(dt.astype(jnp.float32) + p["mamba"]["dt_bias"])
+        a = -jnp.exp(p["mamba"]["a_log"])
+        bsz, s = x.shape[:2]
+        xh = xs.reshape(bsz, s, d.heads, d.head_dim)
+        _, state = mamba2.ssd_chunked(xh, dtv, a, b_in, c_in,
+                                      p["mamba"]["d_skip"], cfg.ssm_chunk)
+        cache = {"conv": conv, "ssm": state.astype(jnp.float32)}
+    return y, cache
+
+
+def _apply_mixer_decode(cfg: ModelConfig, i: int, p: dict, x1: Array,
+                        cache: dict, pos: Array):
+    """Decode mixer.  x1: [B, d]; returns (y [B, d], new_cache)."""
+    if cfg.mixer_kind(i) == "A":
+        dims = _attn_dims(cfg)
+        xs = x1[:, None, :]
+        q, k, v = L.qkv_proj(p["attn"], xs, dims,
+                             jnp.full((1,), pos, jnp.int32)[None, :],
+                             cfg.rope_theta)
+        kc = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k.transpose(0, 2, 1, 3), pos, axis=2)
+        vc = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v.transpose(0, 2, 1, 3), pos, axis=2)
+        b = x1.shape[0]
+        s = kc.shape[2]
+        mask = jnp.arange(s)[None, :] <= pos                    # [1,S]->[B,S]
+        mask = jnp.broadcast_to(mask, (b, s))
+        qg = q[:, 0].reshape(b, dims.num_kv_heads, dims.q_per_kv, dims.head_dim)
+        new_cache = {"k": kc, "v": vc}
+        summ = None
+        if "summ" in cache:
+            # Incremental proxy maintenance from the just-written key only:
+            # running-mean update m <- m + (k_new - m)/c, c = pos%bs + 1.
+            # Slicing the KV cache here instead would dynamic_slice its
+            # SHARDED seq axis and force a full K all-gather per layer
+            # (137 GB/step measured, §Perf round 2).
+            bs = cfg.golden_block_size
+            blk = pos // bs
+            c = (pos % bs + 1).astype(jnp.float32)
+            k_new = k.transpose(0, 2, 1, 3).astype(jnp.float32)  # [B,Hkv,1,dh]
+            old = jax.lax.dynamic_slice_in_dim(
+                cache["summ"], blk, 1, axis=2).astype(jnp.float32)
+            mean = jnp.where(c == 1.0, k_new, old + (k_new - old) / c)
+            summ = jax.lax.dynamic_update_slice_in_dim(
+                cache["summ"], mean.astype(cache["summ"].dtype), blk, axis=2)
+            new_cache["summ"] = summ
+        o = _decode_attention(cfg, qg, kc, vc, mask, summ)
+        y = o.reshape(b, -1) @ p["attn"]["wo"]
+        return y, new_cache
+    y, new = mamba2.mamba_decode_step(p["mamba"], x1, cache, _mamba_dims(cfg))
+    return y, new
+
+
+def _apply_mlp(cfg: ModelConfig, i: int, p: dict, x: Array):
+    """x: [B, S, d] -> (y, aux)."""
+    if cfg.mlp_kind(i) == "none":
+        return jnp.zeros_like(x), jnp.zeros((), jnp.float32)
+    if cfg.mlp_kind(i) == "moe":
+        return moe.moe_apply(p["moe"], x, cfg.num_experts,
+                             cfg.experts_per_token, cfg.capacity_factor,
+                             cfg.moe_group_size)
+    return L.mlp_apply(p["mlp"], x), jnp.zeros((), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# forward passes
+# ---------------------------------------------------------------------------
+
+def embed_tokens(cfg: ModelConfig, params: dict, tokens: Array) -> Array:
+    return params["embed"][tokens]
+
+
+def _lm_head(cfg: ModelConfig, params: dict, x: Array) -> Array:
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x @ w
+    return shard(logits, "batch", "seq", "vocab")
+
+
+def forward_full(cfg: ModelConfig, params: dict, x: Array,
+                 want_cache: bool = False, mode: str = "train"):
+    """Full-sequence forward.  x: [B, S, d] embeddings.
+
+    Returns (logits [B,S,V], cache|None, aux_loss).
+    """
+    positions = jnp.arange(x.shape[1])[None, :]
+
+    def block_body(x, block_params):
+        caches = {}
+        aux_tot = jnp.zeros((), jnp.float32)
+        for i in range(cfg.period):
+            p = block_params[f"l{i}"]
+            x = shard(x, "batch", "seq", "act_embed")
+            h, cache = _apply_mixer_full(cfg, i, p,
+                                         L.rmsnorm(p["ln1"], x), positions,
+                                         want_cache)
+            x = x + h
+            if cfg.mlp_kind(i) != "none":
+                h, aux = _apply_mlp(cfg, i, p, L.rmsnorm(p["ln2"], x))
+                x = x + h
+                aux_tot = aux_tot + aux
+            if want_cache:
+                caches[f"l{i}"] = cache
+        return x, (caches if want_cache else None, aux_tot)
+
+    body = block_body
+    if cfg.remat and mode == "train":
+        body = jax.checkpoint(block_body,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+
+    if cfg.scan_layers:
+        x, (caches, auxes) = jax.lax.scan(
+            lambda c, bp: body(c, bp), x, params["blocks"])
+        aux_total = jnp.sum(auxes)
+    else:
+        cache_list, aux_total = [], jnp.zeros((), jnp.float32)
+        for r in range(cfg.repeats):
+            bp = jax.tree.map(lambda leaf: leaf[r], params["blocks"])
+            x, (cr, aux) = body(x, bp)
+            aux_total = aux_total + aux
+            cache_list.append(cr)
+        caches = (jax.tree.map(lambda *xs: jnp.stack(xs), *cache_list)
+                  if want_cache else None)
+    x = L.rmsnorm(params["final_norm"], x)
+    logits = _lm_head(cfg, params, x)
+    return logits, caches, aux_total
+
+
+def loss_fn(cfg: ModelConfig, params: dict, batch: dict,
+            aux_weight: float = 0.01):
+    """batch: tokens [B,S] (+ optional embeds [B,F,d], loss_mask [B,S])."""
+    x = embed_tokens(cfg, params, batch["tokens"])
+    labels = batch["labels"]
+    mask = batch.get("loss_mask")
+    if "embeds" in batch:                       # modality frontend stub
+        x = jnp.concatenate([batch["embeds"].astype(x.dtype), x], axis=1)
+        pad = jnp.zeros(batch["embeds"].shape[:2], labels.dtype)
+        labels = jnp.concatenate([pad, labels], axis=1)
+        fmask = jnp.concatenate(
+            [jnp.zeros(pad.shape, bool),
+             jnp.ones(batch["tokens"].shape, bool)], axis=1)
+        mask = fmask if mask is None else jnp.concatenate(
+            [jnp.zeros(pad.shape, bool), mask], axis=1)
+    logits, _, aux = forward_full(cfg, params, x, mode="train")
+    logits = logits.astype(jnp.float32)
+    if cfg.padded_vocab != cfg.vocab_size:
+        pad_mask = jnp.arange(cfg.padded_vocab) >= cfg.vocab_size
+        logits = jnp.where(pad_mask, -1e30, logits)
+    logz = jax.scipy.special.logsumexp(logits, -1)
+    gold = jnp.take_along_axis(logits, labels[..., None], -1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        nll = jnp.where(mask, nll, 0.0)
+        denom = jnp.maximum(jnp.sum(mask), 1)
+    else:
+        denom = nll.size
+    loss = jnp.sum(nll) / denom
+    zloss = 1e-4 * jnp.mean(logz ** 2)
+    return loss + aux_weight * aux + zloss, {"nll": loss, "aux": aux}
+
+
+def prefill(cfg: ModelConfig, params: dict, tokens: Array,
+            embeds: Array | None = None):
+    """Returns (last-position logits [B, V], cache)."""
+    x = embed_tokens(cfg, params, tokens)
+    if embeds is not None:
+        x = jnp.concatenate([embeds.astype(x.dtype), x], axis=1)
+    logits, cache, _ = forward_full(cfg, params, x, want_cache=True,
+                                    mode="prefill")
+    return logits[:, -1], cache
+
+
+def decode_step(cfg: ModelConfig, params: dict, cache: dict, token: Array,
+                pos: Array):
+    """One decode step.  token: [B] int32; pos: scalar int32.
+
+    Returns (logits [B, V], new_cache)."""
+    x = params["embed"][token]                                   # [B, d]
+
+    def block_body(x1, xs):
+        block_params, block_cache = xs
+        new_cache = {}
+        for i in range(cfg.period):
+            p = block_params[f"l{i}"]
+            h, nc = _apply_mixer_decode(cfg, i, p,
+                                        L.rmsnorm(p["ln1"], x1),
+                                        block_cache[f"l{i}"], pos)
+            x1 = x1 + h
+            if cfg.mlp_kind(i) != "none":
+                h, _ = _apply_mlp(cfg, i, p,
+                                  L.rmsnorm(p["ln2"], x1[:, None, :]))
+                x1 = x1 + h[:, 0, :]
+            new_cache[f"l{i}"] = nc
+        return x1, new_cache
+
+    if cfg.scan_layers:
+        # K/V ride in the scan CARRY (updated in place layer-by-layer with
+        # dynamic_update_index) rather than as xs->ys streams: the xs/ys
+        # form double-buffers the full stacked cache (observed +4.5
+        # GiB/chip on musicgen decode_32k).  Small leaves (golden block
+        # summaries, mamba conv/ssm states) stay on the xs/ys stream —
+        # carry-slicing them provokes involuntary SPMD rematerialization
+        # when their sharded axes interact with the layer dynamic_slice.
+        def is_big(path_key: str) -> bool:
+            return path_key in ("k", "v")
+
+        big = {li: {kk: vv for kk, vv in lc.items() if is_big(kk)}
+               for li, lc in cache.items()}
+        small = {li: {kk: vv for kk, vv in lc.items() if not is_big(kk)}
+                 for li, lc in cache.items()}
+
+        def carry_body(carry, inp):
+            x1, big_all = carry
+            r, block_params, small_r = inp
+            big_r = jax.tree.map(
+                lambda leaf: jax.lax.dynamic_index_in_dim(
+                    leaf, r, keepdims=False), big_all)
+            block_cache = {li: {**big_r.get(li, {}), **small_r.get(li, {})}
+                           for li in big_r}
+            x1, nc = block_body(x1, (block_params, block_cache))
+            nc_big = {li: {kk: vv for kk, vv in lc.items() if is_big(kk)}
+                      for li, lc in nc.items()}
+            nc_small = {li: {kk: vv for kk, vv in lc.items()
+                             if not is_big(kk)} for li, lc in nc.items()}
+            big_all = jax.tree.map(
+                lambda leaf, new: jax.lax.dynamic_update_index_in_dim(
+                    leaf, new.astype(leaf.dtype), r, axis=0),
+                big_all, nc_big)
+            return (x1, big_all), nc_small
+
+        (x, new_big), new_small = jax.lax.scan(
+            carry_body, (x, big),
+            (jnp.arange(cfg.repeats), params["blocks"], small))
+        new_cache = {li: {**new_big.get(li, {}), **new_small.get(li, {})}
+                     for li in cache}
+    else:
+        ncs = []
+        for r in range(cfg.repeats):
+            bp = jax.tree.map(lambda leaf: leaf[r], params["blocks"])
+            bc = jax.tree.map(lambda leaf: leaf[r], cache)
+            x, nc = block_body(x, (bp, bc))
+            ncs.append(nc)
+        new_cache = jax.tree.map(lambda *xs: jnp.stack(xs), *ncs)
+    x = L.rmsnorm(params["final_norm"], x)
+    logits = x @ (params["embed"].T if cfg.tie_embeddings
+                  else params["lm_head"])
+    return logits, new_cache

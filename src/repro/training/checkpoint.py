@@ -1,0 +1,54 @@
+"""Flat-file checkpointing for param/optimizer pytrees (no orbax offline).
+
+Layout: ``<dir>/step_<N>/arrays.npz`` + ``manifest.json`` holding the
+flattened key paths and dtypes.  Restores onto host then (optionally)
+device_put with the caller's shardings.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save(directory: str | pathlib.Path, step: int, tree) -> pathlib.Path:
+    d = pathlib.Path(directory) / f"step_{step:08d}"
+    d.mkdir(parents=True, exist_ok=True)
+    flat = _flatten(tree)
+    np.savez(d / "arrays.npz", **flat)
+    manifest = {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
+                for k, v in flat.items()}
+    (d / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    return d
+
+
+def latest_step(directory: str | pathlib.Path) -> int | None:
+    d = pathlib.Path(directory)
+    if not d.exists():
+        return None
+    steps = sorted(int(p.name.split("_")[1]) for p in d.glob("step_*"))
+    return steps[-1] if steps else None
+
+
+def restore(directory: str | pathlib.Path, step: int, like_tree):
+    d = pathlib.Path(directory) / f"step_{step:08d}"
+    data = np.load(d / "arrays.npz")
+    flat_like = _flatten(like_tree)
+    assert set(data.files) == set(flat_like), "checkpoint/tree key mismatch"
+    leaves, treedef = jax.tree.flatten(like_tree)
+    keys = list(_flatten(like_tree).keys())
+    restored = [jnp.asarray(data[k]).astype(l.dtype)
+                for k, l in zip(keys, leaves)]
+    return treedef.unflatten(restored)

@@ -1,0 +1,88 @@
+"""AdamW + cosine schedule + global-norm clipping, pure JAX (no optax).
+
+Optimizer state is kept in f32 regardless of param dtype (bf16 params
+keep an f32 master copy), sharded identically to the parameters
+(ZeRO-style: the FSDP rules shard the 'embed' axis of both).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    clip_norm: float = 1.0
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    m: dict
+    v: dict
+    master: dict       # f32 master copy of the params
+
+
+def lr_at(cfg: AdamWConfig, step: jnp.ndarray) -> jnp.ndarray:
+    warm = cfg.lr * jnp.minimum(1.0, (step + 1) / max(cfg.warmup_steps, 1))
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return jnp.where(step < cfg.warmup_steps, warm, cfg.lr * cos)
+
+
+def init_state(params) -> AdamWState:
+    f32 = lambda t: jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), t)
+    # force a copy: astype(f32) of an f32 param aliases it, and params +
+    # master are donated separately by train_step (double-donation error)
+    master = jax.tree.map(lambda x: jnp.array(x, jnp.float32, copy=True),
+                          params)
+    return AdamWState(jnp.zeros((), jnp.int32), f32(params), f32(params), master)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def apply_updates(cfg: AdamWConfig, params, grads, state: AdamWState):
+    """Returns (new_params, new_state, metrics)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    step = state.step + 1
+    lr = lr_at(cfg, state.step)
+    bc1 = 1 - cfg.b1 ** step.astype(jnp.float32)
+    bc2 = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, master, p):
+        g = g.astype(jnp.float32) * scale
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * g * g
+        mh = m / bc1
+        vh = v / bc2
+        new_master = master - lr * (mh / (jnp.sqrt(vh) + cfg.eps)
+                                    + cfg.weight_decay * master)
+        return m, v, new_master, new_master.astype(p.dtype)
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_m = treedef.flatten_up_to(state.m)
+    flat_v = treedef.flatten_up_to(state.v)
+    flat_ma = treedef.flatten_up_to(state.master)
+    flat_p = treedef.flatten_up_to(params)
+    out = [upd(*args) for args in zip(flat_g, flat_m, flat_v, flat_ma, flat_p)]
+    new_m = treedef.unflatten([o[0] for o in out])
+    new_v = treedef.unflatten([o[1] for o in out])
+    new_ma = treedef.unflatten([o[2] for o in out])
+    new_p = treedef.unflatten([o[3] for o in out])
+    return new_p, AdamWState(step, new_m, new_v, new_ma), \
+        {"grad_norm": gnorm, "lr": lr}

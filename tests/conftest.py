@@ -1,0 +1,9 @@
+import os
+
+# Tests run on the single real CPU device; ONLY launch/dryrun.py forces the
+# 512-device placeholder topology (and runs in its own process).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax
+
+jax.config.update("jax_enable_x64", False)

@@ -1,0 +1,66 @@
+"""Theorem 1: the truncation bound holds and shows both asymptotic regimes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bounds
+from repro.core.schedules import make_schedule
+from repro.data import gmm
+
+settings.register_profile("fast", max_examples=25, deadline=None)
+settings.load_profile("fast")
+
+
+@given(st.integers(4, 128), st.integers(2, 8), st.integers(1, 50),
+       st.integers(0, 5000), st.floats(0.05, 20.0))
+def test_theorem1_bound_holds(n, d, k, seed, sigma):
+    """Property: measured truncation error <= 2R(N-k)exp(-Delta_k)."""
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (n, d))
+    q = jax.random.normal(jax.random.fold_in(key, 1), (3, d))
+    k = min(k, n - 1)
+    d2 = jnp.sum((q[:, None] - x[None]) ** 2, -1)
+    logits = -d2 / (2 * sigma ** 2)
+    err = bounds.truncation_error(logits, x, k)
+    bnd = bounds.theorem1_bound(logits, k, bounds.data_radius(x))
+    assert np.all(np.asarray(err) <= np.asarray(bnd) + 1e-5), \
+        f"bound violated: err={err}, bound={bnd}"
+
+
+def test_regime_asymptotics():
+    """Delta_k -> 0 at high noise (bound ~ 2R(N-k)); explodes at low noise."""
+    store = gmm(512, dim=8, seed=0)
+    x = store.X
+    q = x[:4] + 0.01
+    d2 = jnp.sum((q[:, None] - x[None]) ** 2, -1)
+    k = 16
+    lo = bounds.logit_gap(-d2 / (2 * 100.0 ** 2), k)     # sigma = 100
+    hi = bounds.logit_gap(-d2 / (2 * 0.05 ** 2), k)      # sigma = 0.05
+    assert np.all(np.asarray(lo) < 1e-2)
+    assert np.all(np.asarray(hi) > 10.0)
+    # error bound at low noise is negligible despite k << N
+    bnd = bounds.theorem1_bound(-d2 / (2 * 0.05 ** 2), k,
+                                bounds.data_radius(x))
+    assert np.all(np.asarray(bnd) < 1e-3)
+
+
+def test_posterior_progressive_concentration():
+    """Fig. 1 / 3a: the effective golden support (participation ratio)
+    shrinks monotonically (up to noise) as t -> 0."""
+    store = gmm(1024, dim=8, seed=1)
+    sch = make_schedule("ddpm_linear", 1000)
+    key = jax.random.PRNGKey(0)
+    x0 = store.X[:8]
+    prs = []
+    for t in [900, 600, 300, 100, 20]:
+        eps = jax.random.normal(jax.random.fold_in(key, t), x0.shape)
+        xt = sch.add_noise(x0, eps, t)
+        q = xt / float(sch.a[t])
+        d2 = jnp.sum((q[:, None] - store.X[None]) ** 2, -1)
+        logits = -d2 / (2 * float(sch.sigma(t)) ** 2)
+        prs.append(float(jnp.mean(bounds.participation_ratio(logits))))
+    # strictly decreasing across the sweep ends, high -> low support
+    assert prs[0] > 100.0, prs
+    assert prs[-1] < 10.0, prs
+    assert all(prs[i] >= prs[i + 1] * 0.5 for i in range(len(prs) - 1)), prs

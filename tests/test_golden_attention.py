@@ -1,0 +1,100 @@
+"""Golden attention: paper mechanism on the KV cache (+cached summaries)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+from repro.models import transformer as T
+from repro.models.module import init_params
+from repro.models.transformer import model_specs, zero_cache
+
+CFG = ModelConfig(name="tiny", arch_type="dense", num_layers=2, d_model=64,
+                  num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=256,
+                  attn_kind_decode="golden", golden_blocks=2,
+                  golden_block_size=8, dtype="float32", remat=False)
+
+
+def _rand(k, *s):
+    return jax.random.normal(jax.random.PRNGKey(k), s)
+
+
+def test_full_coverage_equals_dense_attention():
+    b, hkv, g, dh, s = 2, 2, 3, 16, 64
+    q, k, v = _rand(0, b, hkv, g, dh), _rand(1, b, hkv, s, dh), _rand(2, b, hkv, s, dh)
+    mask = jnp.ones((b, s), bool)
+    m, l, acc = L.golden_decode_partials(q, k, v, mask, num_blocks=8,
+                                         block_size=8)
+    out = acc / l[..., None]
+    scores = jnp.einsum("bhgd,bhsd->bhgs", q, k) / dh ** 0.5
+    ref = jnp.einsum("bhgs,bhsd->bhgd", jax.nn.softmax(scores, -1), v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-5,
+                               atol=1e-5)
+
+
+def test_cached_summaries_match_recomputed():
+    b, hkv, g, dh, s = 2, 2, 3, 16, 64
+    q, k, v = _rand(3, b, hkv, g, dh), _rand(4, b, hkv, s, dh), _rand(5, b, hkv, s, dh)
+    mask = jnp.arange(s)[None] < 40
+    mask = jnp.broadcast_to(mask, (b, s))
+    summ = L.block_summaries(k, mask, 8)
+    a = L.golden_decode_partials(q, k, v, mask, 4, 8)
+    b_ = L.golden_decode_partials(q, k, v, mask, 4, 8, summaries=summ)
+    for x, y in zip(a, b_):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), rtol=1e-5,
+                                   atol=1e-5)
+
+
+def test_partial_merge_equals_single_shard():
+    """Split-S partials + LSE merge == unsplit attention (flash-decoding)."""
+    b, hkv, g, dh, s = 1, 2, 2, 16, 64
+    q, k, v = _rand(6, b, hkv, g, dh), _rand(7, b, hkv, s, dh), _rand(8, b, hkv, s, dh)
+    mask = jnp.ones((b, s), bool)
+    m, l, acc = L.decode_attention_local(q, k, v, mask)
+    full = acc / l[..., None]
+    h = s // 2
+    parts = [L.decode_attention_local(q, k[:, :, :h], v[:, :, :h], mask[:, :h]),
+             L.decode_attention_local(q, k[:, :, h:], v[:, :, h:], mask[:, h:])]
+    m1, l1, a1 = parts[0]
+    m2, l2, a2 = parts[1]
+    mg = jnp.maximum(m1, m2)
+    lg = l1 * jnp.exp(m1 - mg) + l2 * jnp.exp(m2 - mg)
+    ag = a1 * jnp.exp(m1 - mg)[..., None] + a2 * jnp.exp(m2 - mg)[..., None]
+    np.testing.assert_allclose(np.asarray(ag / lg[..., None]),
+                               np.asarray(full), rtol=1e-5, atol=1e-5)
+
+
+def test_decode_summary_cache_consistent_over_steps():
+    cfg = dataclasses.replace(CFG, golden_cached_summaries=True)
+    specs = model_specs(CFG)
+    params = init_params(specs, jax.random.PRNGKey(0))
+    s, b = 32, 2
+    c_plain = zero_cache(CFG, b, s)
+    c_summ = zero_cache(cfg, b, s)
+    assert "summ" in c_summ["l0"]
+    tok = jnp.zeros((b,), jnp.int32)
+    for pos in range(2, 10):
+        l1, c_plain = T.decode_step(CFG, params, c_plain, tok, jnp.int32(pos))
+        l2, c_summ = T.decode_step(cfg, params, c_summ, tok, jnp.int32(pos))
+        np.testing.assert_allclose(np.asarray(l1), np.asarray(l2),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_golden_truncation_follows_theorem1():
+    """More golden blocks -> lower error vs dense attention (Theorem 1 on
+    the KV posterior)."""
+    b, hkv, g, dh, s = 2, 2, 2, 32, 256
+    q, k, v = _rand(9, b, hkv, g, dh), _rand(10, b, hkv, s, dh), _rand(11, b, hkv, s, dh)
+    mask = jnp.ones((b, s), bool)
+    scores = jnp.einsum("bhgd,bhsd->bhgs", q, k) / dh ** 0.5
+    dense = jnp.einsum("bhgs,bhsd->bhgd", jax.nn.softmax(scores, -1), v)
+    errs = []
+    for kb in (1, 4, 16, 32):
+        m, l, acc = L.golden_decode_partials(q, k, v, mask, kb, 8)
+        out = acc / l[..., None]
+        errs.append(float(jnp.abs(out - dense).max()))
+    assert errs[-1] < 1e-5                       # full coverage == dense
+    assert errs[0] >= errs[1] >= errs[2] - 1e-6  # monotone in coverage

@@ -1,0 +1,78 @@
+"""Streaming softmax: exactness, merge associativity, WSS bias (hypothesis)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import streaming
+
+settings.register_profile("fast", max_examples=25, deadline=None)
+settings.load_profile("fast")
+
+
+def _rand(key, *shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape)
+
+
+@pytest.mark.parametrize("n,d,chunk", [(17, 3, 4), (64, 8, 64), (100, 5, 7),
+                                       (4096, 16, 512), (33, 2, 1)])
+def test_streaming_equals_reference(n, d, chunk):
+    lg = 5.0 * _rand(0, 2, n)
+    vals = _rand(1, n, d)
+    out = streaming.streaming_softmax_mean(lg, vals, chunk)
+    ref = streaming.softmax_mean_reference(lg, vals)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+@given(st.integers(2, 200), st.integers(1, 8), st.integers(0, 10_000),
+       st.floats(0.1, 30.0))
+def test_streaming_chunk_invariance(n, d, seed, scale):
+    """Property: result is independent of the chunking (unbiasedness)."""
+    key = jax.random.PRNGKey(seed)
+    lg = scale * jax.random.normal(key, (n,))
+    vals = jax.random.normal(jax.random.fold_in(key, 1), (n, d))
+    outs = [streaming.streaming_softmax_mean(lg, vals, c)
+            for c in (1, max(n // 3, 1), n)]
+    for o in outs[1:]:
+        np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(o),
+                                   rtol=2e-5, atol=2e-5)
+
+
+@given(st.integers(1, 64), st.integers(1, 64), st.integers(0, 1000))
+def test_merge_associative_and_exact(n1, n2, seed):
+    """Shard-merge (LSE) == single-pass over the concatenation."""
+    key = jax.random.PRNGKey(seed)
+    lg = 8.0 * jax.random.normal(key, (n1 + n2,))
+    vals = jax.random.normal(jax.random.fold_in(key, 1), (n1 + n2, 4))
+    s1 = streaming.update_state(streaming.init_state((), 4), lg[:n1], vals[:n1])
+    s2 = streaming.update_state(streaming.init_state((), 4), lg[n1:], vals[n1:])
+    merged = streaming.finalize(streaming.merge_states(s1, s2))
+    ref = streaming.softmax_mean_reference(lg, vals)
+    np.testing.assert_allclose(np.asarray(merged), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_masking():
+    lg = _rand(3, 10)
+    vals = _rand(4, 10, 2)
+    mask = jnp.arange(10) < 6
+    out = streaming.streaming_softmax_mean(lg, vals, 3, mask=mask)
+    ref = streaming.softmax_mean_reference(lg[:6], vals[:6])
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_wss_is_biased_flattening():
+    """The WSS (PCA-style) estimator flattens the weight distribution:
+    when one chunk holds a dominant logit, WSS pulls the estimate toward
+    the other chunks' means relative to the exact softmax (Sec. 3.2)."""
+    n, d = 64, 3
+    lg = jnp.zeros((n,)).at[5].set(12.0)       # sharp posterior in chunk 0
+    vals = jnp.concatenate([jnp.ones((32, d)), -jnp.ones((32, d))])
+    exact = streaming.softmax_mean_reference(lg, vals)
+    wss = streaming.weighted_streaming_softmax_mean(lg, vals, chunk=32)
+    # exact ~ +1 (the dominant sample); WSS is dragged toward the mean
+    assert float(exact[0]) > 0.99
+    assert float(wss[0]) < float(exact[0]) - 0.2

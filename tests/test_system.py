@@ -1,0 +1,132 @@
+"""End-to-end behaviour tests for the whole system."""
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (GoldDiff, GoldDiffConfig, OptimalDenoiser,
+                        make_schedule, sample)
+from repro.data import cifar_like, gmm
+
+
+def test_end_to_end_generation_quality():
+    """Full pipeline: dataset -> GoldDiff engine -> samples on-manifold."""
+    store = gmm(2048, dim=16, num_modes=8, spread=0.05, seed=0)
+    sch = make_schedule("ddpm_linear", 1000)
+    gd = GoldDiff(OptimalDenoiser(store, sch), GoldDiffConfig())
+    out = sample(gd, sch, (16, 16), jax.random.PRNGKey(0), num_steps=10)
+    assert bool(jnp.isfinite(out).all())
+    d = jnp.sqrt(jnp.min(jnp.sum((out[:, None] - store.X[None]) ** 2, -1), -1))
+    assert float(d.mean()) < 0.5, float(d.mean())
+
+
+def test_serving_engine():
+    from repro.launch.serve import GoldDiffEngine, Request
+    eng = GoldDiffEngine("gmm", {"n": 1024, "dim": 16}, base="optimal",
+                         num_steps=5, max_batch=4)
+    res = eng.serve([Request(0, 3, seed=1), Request(1, 2, seed=2),
+                     Request(2, 6, seed=3)])
+    assert [r.request_id for r in res] == [0, 1, 2]
+    assert sum(r.images.shape[0] for r in res) >= 3 + 2 + 4
+    assert all(np.isfinite(r.images).all() for r in res)
+
+
+def test_train_loop_loss_decreases():
+    """Reduced-LLM training: loss falls over 30 steps (substrate works)."""
+    from repro.launch.train import train
+    losses = train("llama3.2-3b", smoke=True, steps=30, batch=4, seq=128,
+                   ckpt_dir=None, use_mesh=False, log_every=100)
+    assert np.isfinite(losses).all()
+    assert losses[-5:].mean() < losses[:5].mean() - 0.05, \
+        f"loss did not fall: {losses[:3]} -> {losses[-3:]}"
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    from repro.training import checkpoint
+    tree = {"a": jnp.arange(6.0).reshape(2, 3),
+            "b": {"c": jnp.ones((4,), jnp.int32)}}
+    checkpoint.save(tmp_path, 7, tree)
+    assert checkpoint.latest_step(tmp_path) == 7
+    like = jax.tree.map(jnp.zeros_like, tree)
+    restored = checkpoint.restore(tmp_path, 7, like)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_hlo_collective_parser():
+    from repro.distributed.hlo_analysis import collective_bytes
+    hlo = """
+  %ag = bf16[4,128]{1,0} all-gather(bf16[1,128]{1,0} %x), replica_groups={}
+  %ar.1 = f32[256]{0} all-reduce(%y), to_apply=%sum
+  %rs = (f32[16]{0}, f32[16]{0}) reduce-scatter(%a, %b), dimensions={0}
+  %a2a = bf16[8,8]{1,0} all-to-all(%z), dimensions={0}
+  %cp = u32[2]{0} collective-permute(%w), source_target_pairs={{0,1}}
+  %ard = f32[999]{0} all-reduce-done(%ar.1)
+"""
+    cb = collective_bytes(hlo)
+    assert cb["all-gather"] == 4 * 128 * 2
+    assert cb["all-reduce"] == 256 * 4
+    assert cb["reduce-scatter"] == 2 * 16 * 4
+    assert cb["all-to-all"] == 64 * 2
+    assert cb["collective-permute"] == 2 * 4
+    assert cb["total"] == sum(cb[k] for k in cb if k != "total")
+
+
+def test_model_flops_formula():
+    from repro.configs import get_config
+    from repro.distributed.hlo_analysis import model_flops
+    from repro.launch.inputs import SHAPES
+    cfg = get_config("llama3.2-3b")
+    f_train = model_flops(cfg, SHAPES["train_4k"])
+    f_decode = model_flops(cfg, SHAPES["decode_32k"])
+    assert 1e16 < f_train < 1e17, f_train
+    assert 1e11 < f_decode < 2e13, f_decode
+    # MoE counts only active experts
+    moe = get_config("dbrx-132b")
+    active = model_flops(moe, SHAPES["train_4k"])
+    frac = active / (6 * 132e9 * 4096 * 256)
+    assert frac < 0.45, "active-expert accounting should be ~4/16 of total"
+
+
+def test_distributed_retrieval_subprocess():
+    """Distributed golden retrieval == single-host GoldDiff (8 fake devs)."""
+    code = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, numpy as np
+from repro.core import GoldDiff, GoldDiffConfig, OptimalDenoiser, make_schedule
+from repro.core.golddiff import schedule_sizes
+from repro.data import gmm
+from repro.distributed.retrieval import shard_store, distributed_golden_denoise
+
+mesh = jax.make_mesh((4, 2), ("data", "model"))
+store = gmm(1024, dim=16, seed=0)
+sch = make_schedule("ddpm_linear", 1000)
+gd = GoldDiff(OptimalDenoiser(store, sch), GoldDiffConfig())
+sstore = shard_store(store, mesh, "data")
+x0 = store.X[:4]
+ok = True
+for t in (100, 500):
+    eps = jax.random.normal(jax.random.PRNGKey(t), x0.shape)
+    xt = sch.add_noise(x0, eps, t)
+    ref = np.asarray(gd(xt, t))
+    m, k = schedule_sizes(gd.cfg, sch, t, store.n)
+    a = float(sch.a[t]); s2 = float(sch.sigma(t))**2
+    with mesh:
+        out = np.asarray(distributed_golden_denoise(
+            sstore, mesh, xt / a, s2, m, k, proxy_factor=1))
+    err = np.abs(out - ref).max() / (np.abs(ref).max() + 1e-9)
+    print("t", t, "rel err", err)
+    ok &= err < 0.05
+print("PASS" if ok else "FAIL")
+"""
+    import os
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    env.pop("JAX_PLATFORMS", None)
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, timeout=420, cwd="/root/repo", env=env)
+    assert "PASS" in r.stdout, r.stdout + r.stderr
