@@ -1,0 +1,212 @@
+"""Engine vs seed-eager GoldDiff hot path (this PR's headline perf claim).
+
+Times a faithful replica of the seed implementation — gather +
+broadcast-subtract ``[B, m, D]`` temporaries, exact candidate distances
+computed twice per step, per-step ``jax.jit`` — against the
+``GoldDiffEngine`` kernel-layer pipeline (matmul-form distances,
+selection distances reused for aggregation), for the static, masked,
+and full-scan paths on the synthetic benchmark config.
+
+Also validates + times the ``pallas_interpret`` backend on a tiny shape
+(interpret mode executes the kernel body in Python, so it is a
+correctness vehicle, not a perf vehicle — the perf row is ``xla``).
+
+Emits ``BENCH_engine.json`` (name -> us_per_call) so the perf
+trajectory is tracked across PRs:
+
+  PYTHONPATH=src python -m benchmarks.engine_speedup
+"""
+from __future__ import annotations
+
+import json
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import time_call
+from repro.core import (GoldDiff, GoldDiffConfig, OptimalDenoiser,
+                        make_schedule)
+from repro.core import streaming
+from repro.core.dataset import downsample_proxy
+from repro.core.engine import schedule_sizes
+from repro.data import mnist_like
+
+BENCH_JSON = "BENCH_engine.json"
+
+
+# -- faithful replicas of the seed hot path ----------------------------------
+
+def _eager_coarse(store, q, m, factor):
+    q_img = q.reshape(q.shape[:-1] + tuple(store.image_shape))
+    qp = downsample_proxy(q_img, factor)
+    d2 = (jnp.sum(qp * qp, -1, keepdims=True) + store.proxy_norms[None, :]
+          - 2.0 * qp @ store.proxy.T)
+    return jax.lax.top_k(-d2, m)[1]
+
+
+def _eager_static_step(store, sch, cfg, t):
+    """Seed GoldDiff static step: [B, m, D] broadcast-subtract temporaries,
+    rows regathered and distances recomputed for the final softmax."""
+    m_t, k_t = schedule_sizes(cfg, sch, t, store.n)
+    a = float(sch.a[t])
+    sig2 = float(sch.sigma_np(t)) ** 2
+
+    @jax.jit
+    def step(x_t):
+        q = x_t / a
+        cand = _eager_coarse(store, q, m_t, cfg.proxy_factor)
+        xs = store.X[cand]
+        d2 = jnp.sum((q[:, None, :] - xs) ** 2, -1)
+        pos = jax.lax.top_k(-d2, k_t)[1]
+        idx = jnp.take_along_axis(cand, pos, -1)
+        xs_k = store.X[idx]
+        d2k = jnp.sum((q[:, None, :] - xs_k) ** 2, -1)
+        w = jax.nn.softmax(-d2k / (2.0 * sig2), -1)
+        return jnp.einsum("bk,bkd->bd", w, xs_k)
+
+    return step
+
+
+def _eager_masked_step(store, sch, cfg):
+    """Seed call_masked: exact candidate distances computed twice."""
+    n = store.n
+    m_min, m_max, k_min, k_max = cfg.sizes(n)
+    a_arr = jnp.asarray(sch.a)
+    b_arr = jnp.asarray(sch.b)
+
+    @jax.jit
+    def step(x_t, t):
+        g = sch.g(t)
+        m_t = jnp.floor(m_min + (m_max - m_min) * (1.0 - g)).astype(jnp.int32)
+        k_t = jnp.floor(k_min + (k_max - k_min) * g).astype(jnp.int32)
+        a = a_arr[t]
+        sig = b_arr[t] / a
+        q = x_t / a
+        cand = _eager_coarse(store, q, m_max, cfg.proxy_factor)
+        cand_mask = jnp.arange(m_max)[None, :] < m_t
+        xs = store.X[cand]
+        d2 = jnp.sum((q[:, None, :] - xs) ** 2, -1)
+        d2 = jnp.where(cand_mask, d2, jnp.inf)
+        pos = jax.lax.top_k(-d2, k_max)[1]
+        idx = jnp.take_along_axis(cand, pos, -1)
+        xs_k = store.X[idx]
+        d2k = jnp.sum((q[:, None, :] - xs_k) ** 2, -1)
+        lg = -d2k / (2.0 * sig * sig)
+        lg = jnp.where(jnp.arange(k_max)[None, :] < k_t, lg, streaming.NEG_INF)
+        w = jax.nn.softmax(lg, -1)
+        return jnp.einsum("bk,bkd->bd", w, xs_k)
+
+    return step
+
+
+def _eager_full_scan(store, sch, t, chunk=8192):
+    """Seed OptimalDenoiser full scan: [B, N] logits + chunked scan."""
+    a = float(sch.a[t])
+    sig2 = float(sch.sigma_np(t)) ** 2
+
+    @jax.jit
+    def step(x_t):
+        q = x_t / a
+        qn = jnp.sum(q * q, -1, keepdims=True)
+        d2 = jnp.maximum(qn + store.x_norms[None, :] - 2.0 * q @ store.X.T,
+                         0.0)
+        return streaming.streaming_softmax_mean(-d2 / (2.0 * sig2), store.X,
+                                                chunk)
+
+    return step
+
+
+# -- benchmark ----------------------------------------------------------------
+
+def run(fast: bool = True):
+    n, b = (4096, 32) if fast else (16384, 64)
+    store = mnist_like(n, seed=0)
+    sch = make_schedule("ddpm_linear", 1000)
+    cfg = GoldDiffConfig()
+    rng = jax.random.PRNGKey(0)
+    rows = []
+    speedups = []
+
+    gd = GoldDiff(OptimalDenoiser(store, sch), cfg, backend="xla")
+    x = float(sch.b[800]) * jax.random.normal(rng, (b, store.dim))
+
+    # static per-step programs
+    for t in (800, 400, 100):
+        t_eager = time_call(_eager_static_step(store, sch, cfg, t), x)
+        t_eng = time_call(lambda xx, _t=t: gd(xx, _t), x)
+        speedups.append(t_eager / t_eng)
+        rows.append({"kind": "static", "method": "seed_eager", "t": t,
+                     "N": n, "time_per_step_s": t_eager})
+        rows.append({"kind": "static", "method": "engine_xla", "t": t,
+                     "N": n, "time_per_step_s": t_eng,
+                     "speedup": t_eager / t_eng})
+
+    # masked (scan/pjit-compatible) single program
+    eager_masked = _eager_masked_step(store, sch, cfg)
+    eng_masked = jax.jit(gd.call_masked)
+    t_arr = jnp.asarray(400)
+    t_eager = time_call(eager_masked, x, t_arr)
+    t_eng = time_call(eng_masked, x, t_arr)
+    speedups.append(t_eager / t_eng)
+    rows.append({"kind": "masked", "method": "seed_eager", "t": 400,
+                 "N": n, "time_per_step_s": t_eager})
+    rows.append({"kind": "masked", "method": "engine_xla", "t": 400,
+                 "N": n, "time_per_step_s": t_eng,
+                 "speedup": t_eager / t_eng})
+
+    # full-scan Optimal path (Eq. 2) through ops.golden_aggregate — the
+    # seed was already in matmul form here, so this cell tracks that the
+    # ops routing costs nothing rather than contributing to the >=2x claim
+    den = OptimalDenoiser(store, sch, backend="xla")
+    t_eager = time_call(_eager_full_scan(store, sch, 400), x)
+    t_eng = time_call(jax.jit(lambda xx: den(xx, 400)), x)
+    full_scan_speedup = t_eager / t_eng
+    rows.append({"kind": "full_scan", "method": "seed_eager", "t": 400,
+                 "N": n, "time_per_step_s": t_eager})
+    rows.append({"kind": "full_scan", "method": "engine_xla", "t": 400,
+                 "N": n, "time_per_step_s": t_eng,
+                 "speedup": full_scan_speedup})
+
+    # pallas_interpret: correctness-path timing on a tiny shape (the
+    # kernel body runs in Python — this row tracks that it stays usable
+    # for validation, not that it is fast)
+    tiny = mnist_like(256, seed=1)
+    gd_int = GoldDiff(OptimalDenoiser(tiny, sch), cfg,
+                      backend="pallas_interpret")
+    x_tiny = float(sch.b[400]) * jax.random.normal(rng, (4, tiny.dim))
+    t_int = time_call(lambda xx: gd_int(xx, 400), x_tiny, repeats=1)
+    rows.append({"kind": "static_tiny", "method": "engine_pallas_interpret",
+                 "t": 400, "N": 256, "time_per_step_s": t_int})
+
+    mn, md = min(speedups), sorted(speedups)[len(speedups) // 2]
+    summary = (f"engine_xla vs seed eager on the selection path: "
+               f"min {mn:.1f}x, median {md:.1f}x over {len(speedups)} cells "
+               f"(target >= 2x); full_scan {full_scan_speedup:.2f}x "
+               f"(seed already matmul-form)")
+    return rows, summary
+
+
+def write_bench_json(rows, path: str = BENCH_JSON) -> None:
+    """Machine-readable perf record (name -> us_per_call) for cross-PR
+    tracking; called by benchmarks.run after this table executes."""
+    record = {}
+    for r in rows:
+        # N in the key: fast (N=4096) and --full (N=16384) runs must not
+        # overwrite each other in the cross-PR record
+        name = f"{r['kind']}/{r['method']}/N{r['N']}/t{r['t']}"
+        record[name] = round(r["time_per_step_s"] * 1e6, 1)
+    with open(path, "w") as f:
+        json.dump(record, f, indent=2, sort_keys=True)
+
+
+def main():
+    rows, summary = run(fast=True)
+    for r in rows:
+        print(r)
+    write_bench_json(rows)
+    print(f"# wrote {BENCH_JSON}")
+    print(f"# {summary}")
+
+
+if __name__ == "__main__":
+    main()

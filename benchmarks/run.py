@@ -13,9 +13,10 @@ import sys
 import time
 import traceback
 
-from benchmarks import (fig3_sensitivity, fig6_hparams, roofline,
-                        table1_complexity, table2_quality, table3_scale,
-                        table4_edm, table5_orthogonality, table6_bias)
+from benchmarks import (engine_speedup, fig3_sensitivity, fig6_hparams,
+                        roofline, table1_complexity, table2_quality,
+                        table3_scale, table4_edm, table5_orthogonality,
+                        table6_bias)
 
 TABLES = {
     "table1_complexity": table1_complexity,
@@ -27,6 +28,7 @@ TABLES = {
     "fig3_sensitivity": fig3_sensitivity,
     "fig6_hparams": fig6_hparams,
     "roofline": roofline,
+    "engine_speedup": engine_speedup,
 }
 
 
@@ -60,6 +62,9 @@ def main() -> None:
             rows, summary = mod.run(fast=not args.full)
             for r in rows:
                 print(_csv_cell(name, r), flush=True)
+            if hasattr(mod, "write_bench_json"):
+                # machine-readable perf record (e.g. BENCH_engine.json)
+                mod.write_bench_json(rows)
             print(f"# {name} summary: {summary}  ({time.time()-t0:.1f}s)",
                   flush=True)
         except Exception as e:

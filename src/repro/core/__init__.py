@@ -2,6 +2,7 @@
 from repro.core.dataset import DatasetStore, make_store, downsample_proxy
 from repro.core.denoisers import (DENOISERS, OptimalDenoiser, PCADenoiser,
                                   PatchDenoiser, WienerDenoiser, make_denoiser)
+from repro.core.engine import GoldDiffEngine
 from repro.core.golddiff import GoldDiff, GoldDiffConfig, schedule_sizes
 from repro.core.sampler import sample, sample_scan, denoise_trajectory
 from repro.core.schedules import Schedule, make_schedule, sampling_timesteps
@@ -10,7 +11,7 @@ __all__ = [
     "DatasetStore", "make_store", "downsample_proxy",
     "DENOISERS", "OptimalDenoiser", "PCADenoiser", "PatchDenoiser",
     "WienerDenoiser", "make_denoiser",
-    "GoldDiff", "GoldDiffConfig", "schedule_sizes",
+    "GoldDiff", "GoldDiffConfig", "GoldDiffEngine", "schedule_sizes",
     "sample", "sample_scan", "denoise_trajectory",
     "Schedule", "make_schedule", "sampling_timesteps",
 ]

@@ -30,6 +30,7 @@ import numpy as np
 from repro.core import streaming
 from repro.core.dataset import DatasetStore, pairwise_sq_dists
 from repro.core.schedules import Schedule
+from repro.kernels import ops
 
 Array = jnp.ndarray
 Weighting = Literal["ss", "wss"]
@@ -40,16 +41,27 @@ Weighting = Literal["ss", "wss"]
 # ---------------------------------------------------------------------------
 
 class OptimalDenoiser:
-    """Exact posterior mean over the training set (or a golden support)."""
+    """Exact posterior mean over the training set (or a golden support).
+
+    The unbiased (``ss``) paths route through ``repro.kernels.ops``
+    (full scans via the streaming-softmax ``golden_aggregate`` kernel,
+    supports via matmul-form ``support_distances`` +
+    ``golden_support_aggregate``); ``backend`` selects
+    xla / pallas_interpret / pallas uniformly.  The biased ``wss``
+    weighting keeps the chunked streaming estimators (the bias model of
+    Sec. 3.2 is chunk-structured by definition).
+    """
 
     name = "optimal"
 
     def __init__(self, store: DatasetStore, schedule: Schedule,
-                 chunk: int = 8192, weighting: Weighting = "ss"):
+                 chunk: int = 8192, weighting: Weighting = "ss",
+                 backend: str = "xla"):
         self.store = store
         self.schedule = schedule
         self.chunk = chunk
         self.weighting = weighting
+        self.backend = backend
 
     def logits(self, x_t: Array, t: int) -> Array:
         """Full-scan logits l_i = -||x_t/a_t - x_i||^2 / (2 sigma_t^2); [B,N]."""
@@ -60,28 +72,32 @@ class OptimalDenoiser:
         return -d2 / (2.0 * sig2)
 
     def __call__(self, x_t: Array, t: int, support: Array | None = None) -> Array:
-        if support is None:
-            lg = self.logits(x_t, t)
-            if self.weighting == "wss":
-                return streaming.weighted_streaming_softmax_mean(
-                    lg, self.store.X, self.chunk)
-            return streaming.streaming_softmax_mean(lg, self.store.X, self.chunk)
-        return self._on_support(x_t, t, support)
+        if support is not None:
+            return self._on_support(x_t, t, support)
+        if self.weighting == "wss":
+            return streaming.weighted_streaming_softmax_mean(
+                self.logits(x_t, t), self.store.X, self.chunk)
+        a = float(self.schedule.a[t])
+        sig2 = float(self.schedule.sigma_np(t)) ** 2
+        return ops.golden_aggregate(x_t / a, self.store.X, sig2,
+                                    x_norms=self.store.x_norms,
+                                    backend=self.backend).astype(x_t.dtype)
 
     def _on_support(self, x_t: Array, t: int, idx: Array,
                     mask: Array | None = None) -> Array:
         a = float(self.schedule.a[t])
         sig2 = float(self.schedule.sigma_np(t)) ** 2
         q = x_t / a                                # [B, D]
-        xs = self.store.X[idx]                     # [B, k, D]
-        d2 = jnp.sum((q[:, None, :] - xs) ** 2, axis=-1)
+        d2 = ops.support_distances(q, self.store.X, idx,
+                                   x_norms=self.store.x_norms,
+                                   backend=self.backend)
         lg = -d2 / (2.0 * sig2)
         if mask is not None:
             lg = jnp.where(mask, lg, streaming.NEG_INF)
         if self.weighting == "wss":
-            return streaming.wss_combine(lg, xs)
-        w = jax.nn.softmax(lg, axis=-1)
-        return jnp.einsum("bk,bkd->bd", w, xs)
+            return streaming.wss_combine(lg, self.store.X[idx])
+        return ops.golden_support_aggregate(
+            self.store.X, idx, lg, backend=self.backend).astype(x_t.dtype)
 
 
 # ---------------------------------------------------------------------------

@@ -19,13 +19,21 @@ Coarse-to-fine, training-free, plug-and-play:
 3. The base denoiser is evaluated with ``support=S_t`` using the unbiased
    streaming softmax (Sec. 3.2).
 
+Execution is delegated to :class:`repro.core.engine.GoldDiffEngine`,
+which routes every stage through the kernel layer
+(``repro.kernels.ops``: tiled ``pdist`` screening, ``golden_rerank``
+returning indices + distances, streaming ``golden_support_aggregate``)
+and caches one compiled program per (timestep, shape, backend, dtype).
+
 Two execution modes:
 
 * ``static`` — each timestep uses its integer (m_t, k_t); separate XLA
   programs per step, true FLOP savings (matches the paper's complexity
   table; used by the benchmarks).
 * ``masked`` — a single program padded to (m_max, k_max) with validity
-  masks, suitable for ``lax.scan``-based samplers / pjit.
+  masks, suitable for ``lax.scan``-based samplers / pjit.  Exact
+  candidate distances are computed exactly once per step and reused for
+  the aggregation softmax.
 
 Note: Eq. 5 in the paper writes the exact re-ranking distance as
 ``||x_t - x_i||``; we use the rescaled ``||x_t/a_t - x_i||`` which induces
@@ -35,74 +43,60 @@ weight* — the quantity Theorem 1 bounds.
 """
 from __future__ import annotations
 
-import dataclasses
-import math
-from functools import partial
-
 import jax
 import jax.numpy as jnp
 
-from repro.core import streaming
 from repro.core.dataset import DatasetStore, downsample_proxy
+from repro.core.denoisers import OptimalDenoiser
+from repro.core.engine import (GoldDiffConfig, GoldDiffEngine,
+                               schedule_sizes)
 from repro.core.schedules import Schedule
+from repro.kernels import ops
 
 Array = jnp.ndarray
 
-
-@dataclasses.dataclass(frozen=True)
-class GoldDiffConfig:
-    """Subset-size schedules as fractions of N (paper defaults, Sec. 4.1)."""
-
-    m_min_frac: float = 1 / 10   # = k_max (paper: random N/10 matches full)
-    m_max_frac: float = 1 / 4
-    k_min_frac: float = 1 / 20
-    k_max_frac: float = 1 / 10
-    proxy_factor: int = 4
-
-    def sizes(self, n: int) -> tuple[int, int, int, int]:
-        m_min = max(1, int(n * self.m_min_frac))
-        m_max = max(m_min, int(n * self.m_max_frac))
-        k_min = max(1, int(n * self.k_min_frac))
-        k_max = max(k_min, int(n * self.k_max_frac))
-        k_max = min(k_max, m_min)  # golden set always fits the candidate set
-        return m_min, m_max, k_min, k_max
+__all__ = ["GoldDiff", "GoldDiffConfig", "GoldDiffEngine", "schedule_sizes",
+           "coarse_screen", "golden_select"]
 
 
-def schedule_sizes(cfg: GoldDiffConfig, schedule: Schedule, t: int,
-                   n: int) -> tuple[int, int]:
-    """(m_t, k_t) for integer timestep t (static mode)."""
-    g = schedule.g_np(t)
-    m_min, m_max, k_min, k_max = cfg.sizes(n)
-    m_t = int(math.floor(m_min + (m_max - m_min) * (1.0 - g)))
-    k_t = int(math.floor(k_min + (k_max - k_min) * g))
-    return max(1, min(m_t, n)), max(1, min(k_t, m_t, n))
+def coarse_screen(store: DatasetStore, q: Array, m: int, proxy_factor: int,
+                  backend: str = "xla") -> Array:
+    """Top-m candidate indices by proxy distance.  q: [B, D] -> [B, m].
+
+    Routed through ``ops.pdist`` (tiled matmul form, precomputed norms).
+    """
+    q_img = q.reshape(q.shape[:-1] + tuple(store.image_shape))
+    qp = downsample_proxy(q_img, proxy_factor)
+    d2 = ops.pdist(qp, store.proxy, x_norms=store.proxy_norms,
+                   backend=backend)
+    return jax.lax.top_k(-d2, m)[1]
 
 
-def coarse_screen(store: DatasetStore, q: Array, m: int,
-                  proxy_factor: int) -> Array:
-    """Top-m candidate indices by proxy distance.  q: [B, D] -> [B, m]."""
-    img_shape = store.image_shape
-    q_img = q.reshape(q.shape[:-1] + tuple(img_shape))
-    qp = downsample_proxy(q_img, proxy_factor)                 # [B, d]
-    d2 = (jnp.sum(qp * qp, -1, keepdims=True) + store.proxy_norms[None, :]
-          - 2.0 * qp @ store.proxy.T)
-    _, idx = jax.lax.top_k(-d2, m)
+def golden_select(store: DatasetStore, q: Array, cand: Array, k: int,
+                  backend: str = "xla") -> Array:
+    """Exact re-ranking inside the candidate set (Eq. 5). Returns [B, k].
+
+    Matmul-form distances via ``ops.golden_rerank`` — no [B, m, D]
+    broadcast-subtract temporaries.
+    """
+    idx, _ = ops.golden_rerank(q, store.X, cand, k, x_norms=store.x_norms,
+                               backend=backend)
     return idx
 
 
-def golden_select(store: DatasetStore, q: Array, cand: Array, k: int) -> Array:
-    """Exact re-ranking inside the candidate set (Eq. 5). Returns [B, k]."""
-    xs = store.X[cand]                                          # [B, m, D]
-    d2 = jnp.sum((q[:, None, :] - xs) ** 2, axis=-1)            # [B, m]
-    _, pos = jax.lax.top_k(-d2, k)
-    return jnp.take_along_axis(cand, pos, axis=-1)
-
-
 class GoldDiff:
-    """Plug-and-play wrapper: GoldDiff(base_denoiser) (paper Tab. 5)."""
+    """Plug-and-play wrapper: GoldDiff(base_denoiser) (paper Tab. 5).
+
+    ``backend`` / ``storage_dtype`` configure the execution engine
+    (see :class:`GoldDiffEngine`); ``backend=None`` (default) inherits
+    the base denoiser's backend so the fused path and the explicit
+    ``support=`` path run the same kernels.  ``xla`` is the fast path on
+    CPU, ``pallas`` lowers the TPU kernels.
+    """
 
     def __init__(self, base, cfg: GoldDiffConfig | None = None,
-                 jit_steps: bool = True):
+                 jit_steps: bool = True, backend: str | None = None,
+                 storage_dtype=None):
         self.base = base
         self.cfg = cfg or GoldDiffConfig()
         self.store: DatasetStore = base.store
@@ -111,70 +105,51 @@ class GoldDiff:
         if getattr(base, "weighting", "ss") == "wss":
             base.weighting = "ss"
         self.name = f"golddiff+{base.name}"
-        # Per-timestep jit cache: the golden path is many small gather/
-        # einsum ops whose eager dispatch overhead would swamp the FLOP
-        # savings; each t has static (m_t, k_t) so one program per step.
         self.jit_steps = jit_steps
-        self._programs: dict = {}
+        if backend is None:
+            backend = getattr(base, "backend", "xla")
+        self.engine = GoldDiffEngine(self.store, self.schedule, self.cfg,
+                                     backend=backend,
+                                     storage_dtype=storage_dtype)
+
+    @property
+    def backend(self) -> str:
+        return self.engine.backend
 
     # -- static mode ---------------------------------------------------------
     def select(self, x_t: Array, t: int) -> Array:
         """Golden support S_t for each query; [B, k_t] (static shapes)."""
-        m_t, k_t = schedule_sizes(self.cfg, self.schedule, t, self.store.n)
-        a = float(self.schedule.a[t])
-        q = x_t / a
-        cand = coarse_screen(self.store, q, m_t, self.cfg.proxy_factor)
-        return golden_select(self.store, q, cand, k_t)
+        return self.engine.select(x_t, int(t), jit=self.jit_steps)
 
     def __call__(self, x_t: Array, t: int, support: Array | None = None) -> Array:
         if support is not None:
             return self.base(x_t, t, support=support)
         t = int(t)
+        if isinstance(self.base, OptimalDenoiser):
+            # fused engine path: selection distances reused for the
+            # aggregation softmax, one compiled program per step
+            return self.engine.denoise(x_t, t, jit=self.jit_steps)
+        # patch-family bases compute their own (feature-space) logits on
+        # the golden support; only the selection runs through the engine
         if not self.jit_steps:
             return self.base(x_t, t, support=self.select(x_t, t))
-        key = (t, x_t.shape)
-        if key not in self._programs:
-            # patch-based bases build numpy feature caches lazily; force
-            # them OUTSIDE the traced program
-            if hasattr(self.base, "_dataset_features"):
-                self.base._dataset_features(self.base.patch_size(t))
-            self._programs[key] = jax.jit(
-                lambda x: self.base(x, t, support=self.select(x, t)))
-        return self._programs[key](x_t)
+        # patch-based bases build numpy feature caches lazily; force
+        # them OUTSIDE the traced program
+        if hasattr(self.base, "_dataset_features"):
+            self.base._dataset_features(self.base.patch_size(t))
+        a, _ = self.engine.constants(t)
+        fn = self.engine.program(
+            self.engine._key(("wrap", self.base.name), t, x_t),
+            lambda: jax.jit(lambda x: self.base(
+                x, t, support=self.engine._select_body(x / a, t)[0])))
+        return fn(x_t)
 
     # -- masked (scan-compatible) mode ----------------------------------------
     def call_masked(self, x_t: Array, t: Array) -> Array:
         """One-program variant: shapes padded to (m_max, k_max), sizes masked.
 
         ``t`` may be a traced integer array; m_t/k_t enter only through
-        masks, so this body is safe inside ``lax.scan`` / pjit.
+        masks, so this body is safe inside ``lax.scan`` / pjit.  (Optimal
+        base only: patch bases need static patch sizes -> static mode.)
         """
-        n = self.store.n
-        m_min, m_max, k_min, k_max = self.cfg.sizes(n)
-        g = self.schedule.g(t)
-        m_t = jnp.floor(m_min + (m_max - m_min) * (1.0 - g)).astype(jnp.int32)
-        k_t = jnp.floor(k_min + (k_max - k_min) * g).astype(jnp.int32)
-        a = jnp.asarray(self.schedule.a)[t]
-        q = x_t / a
-        cand = coarse_screen(self.store, q, m_max, self.cfg.proxy_factor)
-        cand_mask = jnp.arange(m_max)[None, :] < m_t             # top-m sorted
-        xs = self.store.X[cand]
-        d2 = jnp.sum((q[:, None, :] - xs) ** 2, axis=-1)
-        d2 = jnp.where(cand_mask, d2, jnp.inf)
-        _, pos = jax.lax.top_k(-d2, k_max)
-        idx = jnp.take_along_axis(cand, pos, axis=-1)
-        k_mask = jnp.arange(k_max)[None, :] < k_t
-        return self._base_masked(x_t, t, idx, k_mask)
-
-    def _base_masked(self, x_t: Array, t: Array, idx: Array, mask: Array) -> Array:
-        # Masked traced-t path for the Optimal base (the scan sampler's
-        # target).  Patch bases need static patch sizes -> static mode only.
-        a = jnp.asarray(self.schedule.a)[t]
-        sig = jnp.asarray(self.schedule.b)[t] / a
-        q = x_t / a
-        xs = self.store.X[idx]
-        d2 = jnp.sum((q[:, None, :] - xs) ** 2, axis=-1)
-        lg = -d2 / (2.0 * sig * sig)
-        lg = jnp.where(mask, lg, streaming.NEG_INF)
-        w = jax.nn.softmax(lg, axis=-1)
-        return jnp.einsum("bk,bkd->bd", w, xs)
+        return self.engine.denoise_masked(x_t, t)

@@ -37,8 +37,7 @@ def sample(denoiser: Callable, schedule: Schedule, shape: tuple,
     ts = sampling_timesteps(schedule, num_steps)
     rng, init = jax.random.split(rng)
     t0 = int(ts[0])
-    x = float(schedule.b[t0]) * jax.random.normal(init, shape) \
-        * (1.0 if schedule.a[t0] < 0.99 else 1.0)
+    x = float(schedule.b[t0]) * jax.random.normal(init, shape)
     # For VP schedules a_T ~ 0 so x_T ~ b_T * eps; the general init is
     # a_T * E[x0] + b_T eps ~= b_T eps (data is standardized).
     traj = []

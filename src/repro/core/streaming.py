@@ -124,19 +124,47 @@ def weighted_streaming_softmax_mean(logits: Array, values: Array,
     combined with weights w_c ∝ n_c * exp(mean_c(logits)).  Using the
     *mean* logit instead of the log-sum-exp flattens inter-chunk
     competition — the smoothing bias of Sec. 3.2.
+
+    When ``n % chunk != 0`` the tail remainder is folded into the last
+    chunk (one larger chunk) rather than dropped; the size factor n_c in
+    the chunk weights then matters and is carried as ``log n_c``.
     """
     n = logits.shape[-1]
     d = values.shape[-1]
+    batch = logits.shape[:-1]
     chunk = min(chunk, n)
     num = max(n // chunk, 1)
-    usable = num * chunk if num * chunk <= n else n
-    lg = logits[..., :usable].reshape(logits.shape[:-1] + (num, -1)).astype(jnp.float32)
-    vals = values[:usable].reshape(num, -1, d).astype(jnp.float32)
-    # local softmax mean per chunk: [..., num, D]
-    p = jax.nn.softmax(lg, axis=-1)
-    mu = jnp.einsum("...nc,ncd->...nd", p, vals)
-    # chunk weights from mean logit (the bias): [..., num]
-    wc = jax.nn.softmax(jnp.mean(lg, axis=-1), axis=-1)
+    rem = n - num * chunk
+    lg32 = logits.astype(jnp.float32)
+    vals32 = values.astype(jnp.float32)
+    if rem == 0:
+        lg = lg32.reshape(batch + (num, chunk))
+        vals = vals32.reshape(num, chunk, d)
+        # local softmax mean per chunk: [..., num, D]
+        p = jax.nn.softmax(lg, axis=-1)
+        mu = jnp.einsum("...nc,ncd->...nd", p, vals)
+        # chunk weights from mean logit (the bias): [..., num]
+        wc = jax.nn.softmax(jnp.mean(lg, axis=-1), axis=-1)
+        return jnp.einsum("...n,...nd->...d", wc, mu)
+    # ragged tail: num-1 equal chunks + one final chunk of (chunk + rem)
+    s = (num - 1) * chunk
+    mus, mls, counts = [], [], []
+    if s:
+        lg_h = lg32[..., :s].reshape(batch + (num - 1, chunk))
+        vals_h = vals32[:s].reshape(num - 1, chunk, d)
+        p = jax.nn.softmax(lg_h, axis=-1)
+        mus.append(jnp.einsum("...nc,ncd->...nd", p, vals_h))
+        mls.append(jnp.mean(lg_h, axis=-1))
+        counts.extend([chunk] * (num - 1))
+    lg_t = lg32[..., s:]
+    p_t = jax.nn.softmax(lg_t, axis=-1)
+    mus.append(jnp.einsum("...c,cd->...d", p_t, vals32[s:])[..., None, :])
+    mls.append(jnp.mean(lg_t, axis=-1)[..., None])
+    counts.append(n - s)
+    mu = jnp.concatenate(mus, axis=-2)
+    ml = jnp.concatenate(mls, axis=-1)
+    log_nc = jnp.log(jnp.asarray(counts, jnp.float32))
+    wc = jax.nn.softmax(ml + log_nc, axis=-1)
     return jnp.einsum("...n,...nd->...d", wc, mu)
 
 
@@ -148,16 +176,43 @@ def wss_combine(logits: Array, values: Array, chunk: int = 64) -> Array:
     by mean-logit weights) but for gathered golden subsets.
     """
     k = logits.shape[-1]
+    d = values.shape[-1]
     chunk = max(1, min(chunk, k))
     nc = k // chunk
-    usable = nc * chunk
-    lg = logits[..., :usable].reshape(logits.shape[:-1] + (nc, chunk))
-    lg = lg.astype(jnp.float32)
-    vals = values[..., :usable, :].reshape(
-        values.shape[:-2] + (nc, chunk, values.shape[-1])).astype(jnp.float32)
-    p = jax.nn.softmax(lg, axis=-1)
-    mu = jnp.einsum("...nc,...ncd->...nd", p, vals)
-    wc = jax.nn.softmax(jnp.mean(lg, axis=-1), axis=-1)
+    rem = k - nc * chunk
+    lg32 = logits.astype(jnp.float32)
+    vals32 = values.astype(jnp.float32)
+
+    def _chunk_stats(lg, vals):
+        p = jax.nn.softmax(lg, axis=-1)
+        mu = jnp.einsum("...nc,...ncd->...nd", p, vals)
+        return mu, jnp.mean(lg, axis=-1)
+
+    if rem == 0:
+        lg = lg32.reshape(logits.shape[:-1] + (nc, chunk))
+        vals = vals32.reshape(values.shape[:-2] + (nc, chunk, d))
+        mu, ml = _chunk_stats(lg, vals)
+        wc = jax.nn.softmax(ml, axis=-1)
+        return jnp.einsum("...n,...nd->...d", wc, mu)
+    # tail remainder folded into one final larger chunk (same fix as
+    # weighted_streaming_softmax_mean; weights carry log n_c)
+    s = (nc - 1) * chunk
+    mus, mls, counts = [], [], []
+    if s:
+        mu, ml = _chunk_stats(
+            lg32[..., :s].reshape(logits.shape[:-1] + (nc - 1, chunk)),
+            vals32[..., :s, :].reshape(values.shape[:-2] + (nc - 1, chunk, d)))
+        mus.append(mu)
+        mls.append(ml)
+        counts.extend([chunk] * (nc - 1))
+    mu_t, ml_t = _chunk_stats(lg32[..., s:][..., None, :],
+                              vals32[..., s:, :][..., None, :, :])
+    mus.append(mu_t)
+    mls.append(ml_t)
+    counts.append(k - s)
+    mu = jnp.concatenate(mus, axis=-2)
+    ml = jnp.concatenate(mls, axis=-1)
+    wc = jax.nn.softmax(ml + jnp.log(jnp.asarray(counts, jnp.float32)), -1)
     return jnp.einsum("...n,...nd->...d", wc, mu)
 
 

@@ -15,6 +15,12 @@ The GoldDiff selection + aggregation pipeline, shard-parallel (DESIGN §3):
 This is the same two-stage top-k + LSE-merge pattern the decode-attention
 path uses for sharded KV caches (models/layers.py) — the paper's
 mechanism implemented once, reused twice.
+
+The shard-local distance math (proxy screening and exact re-rank) goes
+through the kernel ops layer (``repro.kernels.ops``, ``backend="xla"``:
+shard_map bodies compile for whatever mesh platform is active, where
+Pallas TPU kernels may not lower), so the matmul-form distances here are
+the exact same code the single-host GoldDiffEngine runs.
 """
 from __future__ import annotations
 
@@ -25,6 +31,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.dataset import DatasetStore, downsample_proxy
+from repro.kernels import ops
 
 Array = jnp.ndarray
 NEG_INF = -1e30
@@ -64,16 +71,16 @@ def distributed_golden_denoise(store: DatasetStore, mesh: Mesh, q: Array,
     k_loc = max(1, -(-k // n_sh))
 
     def local(x_sh, xn_sh, proxy_sh, pn_sh, q_rep):
-        # 1. local coarse screening
+        # 1. local coarse screening via the ops layer (matmul-form pdist;
+        #    +inf norms on padded rows exclude them from every top-k)
         q_img = q_rep.reshape(q_rep.shape[:-1] + tuple(store.image_shape))
         qp = downsample_proxy(q_img, proxy_factor)
-        d2p = (jnp.sum(qp * qp, -1, keepdims=True) + pn_sh[None, :]
-               - 2.0 * qp @ proxy_sh.T)
+        d2p = ops.pdist(qp, proxy_sh, x_norms=pn_sh, backend="xla")
         _, cand = jax.lax.top_k(-d2p, min(m_loc, x_sh.shape[0]))
-        # 2. local exact re-rank inside candidates
+        # 2. local exact re-rank inside candidates (matmul form over the
+        #    gathered rows — no [B, m_loc, D] subtract temporaries)
         xc = x_sh[cand]                                    # [B, m_loc, D]
-        d2 = jnp.sum((q_rep[:, None, :] - xc) ** 2, -1)
-        d2 = jnp.where(jnp.isfinite(xn_sh[cand]), d2, jnp.inf)
+        d2 = ops.support_sqdist(q_rep, xc, xn_sh[cand], backend="xla")
         kk = min(k_loc, d2.shape[-1])
         neg, pos = jax.lax.top_k(-d2, kk)
         # 3. global top-k over gathered local winners
@@ -97,9 +104,11 @@ def distributed_golden_denoise(store: DatasetStore, mesh: Mesh, q: Array,
         return acc_g / jnp.maximum(l_g, 1e-30)[:, None]
 
     spec_row = P(axis)
-    return jax.shard_map(
-        local, mesh=mesh,
-        in_specs=(spec_row, spec_row, spec_row, spec_row, P()),
-        out_specs=P(),
-        check_vma=False,
-    )(store.X, store.x_norms, store.proxy, store.proxy_norms, q)
+    kw = dict(mesh=mesh, in_specs=(spec_row, spec_row, spec_row, spec_row,
+                                   P()), out_specs=P())
+    if hasattr(jax, "shard_map"):                  # jax >= 0.6
+        mapped = jax.shard_map(local, check_vma=False, **kw)
+    else:                                          # jax 0.4.x
+        from jax.experimental.shard_map import shard_map
+        mapped = shard_map(local, check_rep=False, **kw)
+    return mapped(store.X, store.x_norms, store.proxy, store.proxy_norms, q)

@@ -1,15 +1,35 @@
 """Jit'd public wrappers over the Pallas kernels with backend dispatch.
 
+This module is the single entry point the core library uses for the
+GoldDiff hot path — coarse screening (``pdist``), exact re-ranking
+(``golden_rerank``), and golden aggregation (``golden_support_aggregate``
+for supports, ``golden_aggregate`` for full scans) — plus the attention
+kernels.  ``repro.core.engine.GoldDiffEngine`` routes every stage
+through these wrappers so the same code path serves CPU tests, the
+multi-pod dry-run, and real TPUs.
+
 ``backend``:
   * "pallas"            — lower the TPU kernel (real hardware)
   * "pallas_interpret"  — execute the kernel body in Python on CPU
                           (correctness validation; the tests use this)
-  * "xla"               — the pure-jnp reference math (used by the
-                          multi-pod dry-run, which compiles for the CPU
-                          backend where Pallas TPU kernels cannot lower)
+  * "xla"               — pure-jnp reference math (CPU benchmarks and
+                          the multi-pod dry-run, which compiles for the
+                          CPU backend where Pallas TPU kernels cannot
+                          lower)
+
+Strategy note (measured on XLA:CPU): row gathers run ~50x slower per
+element than GEMM, so the "xla" backend computes re-rank distances in
+the *dense* form (one [B, N] GEMM + O(B m) scalar lookups) and
+aggregates by scattering the k softmax weights into [B, N] and doing a
+second GEMM — ~10x faster end-to-end than gathering [B, m, D] rows on
+CPU.  The Pallas backends use the tiled gather kernels, the right shape
+for TPU (MXU matmuls over VMEM tiles, DMA gathers).  Both paths compute
+the same math with fp32 accumulation; parity is asserted in
+``tests/test_engine.py``.
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
@@ -17,21 +37,80 @@ from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.golden_aggregate import golden_aggregate as _agg
 from repro.kernels.golden_attention import (golden_attention_decode as _gattn,
                                             select_golden_blocks)
+from repro.kernels.golden_rerank import support_sqdist as _sqd
+from repro.kernels.golden_support_aggregate import (
+    golden_support_aggregate as _sagg)
 from repro.kernels.pdist import pdist as _pdist
 
 DEFAULT_BACKEND = "pallas_interpret"
+BACKENDS = ("pallas", "pallas_interpret", "xla")
 
 
-def pdist(q, x, backend: str = DEFAULT_BACKEND, **kw):
+def pdist(q, x, q_norms=None, x_norms=None, backend: str = DEFAULT_BACKEND,
+          **kw):
+    """Pairwise squared distances [B, N] (tiled matmul form, fp32)."""
     if backend == "xla":
-        return ref.pdist_ref(q, x)
-    return _pdist(q, x, interpret=(backend != "pallas"), **kw)
+        return ref.pdist_ref(q, x, q_norms, x_norms)
+    return _pdist(q, x, q_norms, x_norms, interpret=(backend != "pallas"),
+                  **kw)
 
 
-def golden_aggregate(q, x, sigma2: float, backend: str = DEFAULT_BACKEND, **kw):
+def support_sqdist(q, xs, x_norms, backend: str = DEFAULT_BACKEND, **kw):
+    """Distances to per-query gathered rows: [B, M, D] -> [B, M] fp32."""
     if backend == "xla":
-        return ref.golden_aggregate_ref(q, x, sigma2)
-    return _agg(q, x, float(sigma2), interpret=(backend != "pallas"), **kw)
+        return ref.support_sqdist_ref(q, xs, x_norms)
+    return _sqd(q, xs, x_norms, interpret=(backend != "pallas"), **kw)
+
+
+def support_distances(q, x, idx, x_norms=None,
+                      backend: str = DEFAULT_BACKEND, **kw):
+    """Exact distances q -> x[idx] with no [B, m, D] subtract temporaries.
+
+    xla: dense form (one [B, N] GEMM + scalar lookup — no row gathers).
+    pallas*: row gather + tiled matmul-form kernel.
+    """
+    if x_norms is None:
+        x_norms = jnp.sum(x.astype(jnp.float32) ** 2, -1)
+    if backend == "xla":
+        d2_all = ref.pdist_ref(q, x, x_norms=x_norms)
+        return jnp.take_along_axis(d2_all, idx, axis=-1)
+    return support_sqdist(q, x[idx], x_norms[idx], backend=backend, **kw)
+
+
+def golden_rerank(q, x, cand, k: int, x_norms=None,
+                  backend: str = DEFAULT_BACKEND, **kw):
+    """Exact re-rank inside the candidate set (paper Eq. 5).
+
+    Returns ``(idx, d2)``: top-k dataset indices [B, k] AND their exact
+    squared distances [B, k] (sorted ascending), so the caller reuses
+    selection distances for the aggregation softmax instead of
+    recomputing them.
+    """
+    d2 = support_distances(q, x, cand, x_norms, backend=backend, **kw)
+    neg, pos = jax.lax.top_k(-d2, k)
+    return jnp.take_along_axis(cand, pos, axis=-1), -neg
+
+
+def golden_support_aggregate(x, idx, logits, backend: str = DEFAULT_BACKEND,
+                             **kw):
+    """softmax(logits)-weighted mean of x[idx] per query -> [B, D] fp32.
+
+    ``logits`` come from re-ranking distances (masking is the caller's
+    job: NEG_INF entries get zero weight).  xla: scatter + GEMM;
+    pallas*: gather + streaming online-softmax kernel.
+    """
+    if backend == "xla":
+        return ref.scatter_aggregate_ref(x, idx, logits)
+    return _sagg(x[idx], logits, interpret=(backend != "pallas"), **kw)
+
+
+def golden_aggregate(q, x, sigma2: float, x_norms=None,
+                     backend: str = DEFAULT_BACKEND, **kw):
+    """Full-scan posterior mean (Eq. 2) via streaming softmax."""
+    if backend == "xla":
+        return ref.golden_aggregate_ref(q, x, sigma2, x_norms)
+    return _agg(q, x, float(sigma2), x_norms=x_norms,
+                interpret=(backend != "pallas"), **kw)
 
 
 def golden_attention_decode(q, k, v, block_idx, valid, block_size: int = 128,
@@ -51,5 +130,7 @@ def flash_attention(q, k, v, causal: bool = True,
                   **kw)
 
 
-__all__ = ["pdist", "golden_aggregate", "golden_attention_decode",
-           "select_golden_blocks", "flash_attention"]
+__all__ = ["pdist", "support_sqdist", "support_distances", "golden_rerank",
+           "golden_support_aggregate", "golden_aggregate",
+           "golden_attention_decode", "select_golden_blocks",
+           "flash_attention", "DEFAULT_BACKEND", "BACKENDS"]

@@ -7,19 +7,64 @@ import jax.numpy as jnp
 NEG_INF = -1e30
 
 
-def pdist_ref(q: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+def pdist_ref(q: jnp.ndarray, x: jnp.ndarray,
+              q_norms: jnp.ndarray | None = None,
+              x_norms: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Matmul-form pairwise squared distances; accepts precomputed row
+    norms (e.g. +inf on padded/masked dataset rows -> +inf distance)."""
     q = q.astype(jnp.float32)
     x = x.astype(jnp.float32)
-    d2 = (jnp.sum(q * q, -1)[:, None] + jnp.sum(x * x, -1)[None, :]
-          - 2.0 * q @ x.T)
+    qn = jnp.sum(q * q, -1) if q_norms is None else q_norms.astype(jnp.float32)
+    xn = jnp.sum(x * x, -1) if x_norms is None else x_norms.astype(jnp.float32)
+    d2 = qn[:, None] + xn[None, :] - 2.0 * q @ x.T
     return jnp.maximum(d2, 0.0)
 
 
-def golden_aggregate_ref(q: jnp.ndarray, x: jnp.ndarray,
-                         sigma2: float) -> jnp.ndarray:
-    lg = -pdist_ref(q, x) / (2.0 * sigma2)
+def support_sqdist_ref(q: jnp.ndarray, xs: jnp.ndarray,
+                       x_norms: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Distances to per-query gathered rows.  q: [B, D], xs: [B, M, D],
+    x_norms: [B, M] -> [B, M] fp32 (matmul form, no [B, M, D] temporaries)."""
+    q32 = q.astype(jnp.float32)
+    xs32 = xs.astype(jnp.float32)
+    xn = (jnp.sum(xs32 * xs32, -1) if x_norms is None
+          else x_norms.astype(jnp.float32))
+    qn = jnp.sum(q32 * q32, -1, keepdims=True)
+    dot = jnp.einsum("bd,bmd->bm", q32, xs32)
+    return jnp.maximum(qn + xn - 2.0 * dot, 0.0)
+
+
+def golden_aggregate_ref(q: jnp.ndarray, x: jnp.ndarray, sigma2: float,
+                         x_norms: jnp.ndarray | None = None) -> jnp.ndarray:
+    lg = -pdist_ref(q, x, x_norms=x_norms) / (2.0 * sigma2)
     w = jax.nn.softmax(lg, axis=-1)
-    return (w @ x.astype(jnp.float32)).astype(q.dtype)
+    out = jax.lax.dot_general(w, x, (((1,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    return out.astype(q.dtype)
+
+
+def scatter_aggregate_ref(x: jnp.ndarray, idx: jnp.ndarray,
+                          logits: jnp.ndarray) -> jnp.ndarray:
+    """softmax(logits)-weighted mean of x[idx] per query -> [B, D] fp32.
+
+    Dense scatter + GEMM form: on XLA:CPU row gathers run ~50x slower
+    per element than GEMM, so scattering the k weights into a [B, N]
+    matrix and multiplying by the (contiguous) dataset is much faster
+    than gathering [B, k, D] rows.  ``.add`` handles duplicate indices
+    exactly (their weights sum, as in the gathered formulation).
+    """
+    b, n = logits.shape[0], x.shape[0]
+    w = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    ws = jnp.zeros((b, n), jnp.float32).at[
+        jnp.arange(b)[:, None], idx].add(w)
+    return jax.lax.dot_general(ws, x, (((1,), (0,)), ((), ())),
+                               preferred_element_type=jnp.float32)
+
+
+def golden_support_aggregate_ref(xs: jnp.ndarray,
+                                 logits: jnp.ndarray) -> jnp.ndarray:
+    """Gathered-values oracle for the Pallas support-aggregate kernel."""
+    w = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    return jnp.einsum("bk,bkd->bd", w, xs.astype(jnp.float32))
 
 
 def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,

@@ -1,0 +1,76 @@
+"""Tiny deterministic stand-in for ``hypothesis`` (not installed here).
+
+Implements just the surface the test suite uses — ``@given`` over
+``st.integers``/``st.floats`` strategies plus the ``settings`` profile
+calls — by sampling a fixed number of pseudo-random examples from a
+seeded RNG.  This keeps the property tests *running* (rather than
+skipped) in environments without hypothesis; when hypothesis is
+available the real library is used instead (see the try/except imports
+in the test modules).
+"""
+from __future__ import annotations
+
+import random
+
+
+class _Strategy:
+    def __init__(self, sample):
+        self.sample = sample
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def floats(min_value: float, max_value: float) -> _Strategy:
+    return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+
+class settings:
+    """Profile registry mimicking ``hypothesis.settings``."""
+
+    _profiles: dict = {"default": {"max_examples": 10}}
+    _active: str = "default"
+
+    def __init__(self, **kw):  # accept-and-ignore decorator form
+        pass
+
+    def __call__(self, fn):
+        return fn
+
+    @classmethod
+    def register_profile(cls, name: str, **kw) -> None:
+        cls._profiles[name] = kw
+
+    @classmethod
+    def load_profile(cls, name: str) -> None:
+        cls._active = name
+
+    @classmethod
+    def max_examples(cls) -> int:
+        return int(cls._profiles.get(cls._active, {}).get("max_examples", 10))
+
+
+def given(*strats: _Strategy):
+    """Run the test body over ``max_examples`` deterministic draws."""
+
+    def deco(fn):
+        def runner():
+            rng = random.Random(0xD1FF05E)
+            for _ in range(settings.max_examples()):
+                fn(*(s.sample(rng) for s in strats))
+
+        runner.__name__ = fn.__name__
+        runner.__doc__ = fn.__doc__
+        return runner
+
+    return deco
+
+
+class _StrategiesModule:
+    integers = staticmethod(integers)
+    floats = staticmethod(floats)
+
+
+st = _StrategiesModule()
+strategies = st

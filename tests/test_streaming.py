@@ -3,7 +3,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                      # container lacks hypothesis
+    from _hypothesis_fallback import given, settings, st
 
 from repro.core import streaming
 
@@ -62,6 +65,47 @@ def test_masking():
     ref = streaming.softmax_mean_reference(lg[:6], vals[:6])
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
                                rtol=1e-5, atol=1e-5)
+
+
+def test_wss_tail_remainder_not_dropped():
+    """Regression: with n % chunk != 0 the tail used to be silently
+    dropped (``usable = num * chunk``); the dominant sample below lives
+    entirely in the remainder."""
+    n, d, chunk = 70, 3, 32                        # remainder of 6
+    lg = jnp.zeros((n,)).at[n - 1].set(15.0)       # sharp mode in the tail
+    vals = jnp.zeros((n, d)).at[n - 1].set(5.0)
+    out = streaming.weighted_streaming_softmax_mean(lg, vals, chunk)
+    assert float(out[0]) > 1.0, np.asarray(out)    # old code returned ~0
+
+
+def test_wss_tail_fold_matches_manual_chunking():
+    """The folded tail equals the explicit ragged-chunk WSS formula
+    (w_c ∝ n_c exp(mean logit), local softmax means)."""
+    n, d, chunk = 23, 4, 8                         # chunks of 8, 8, 15-8=... -> [8, 15]
+    key = jax.random.PRNGKey(0)
+    lg = 3.0 * jax.random.normal(key, (n,))
+    vals = jax.random.normal(jax.random.fold_in(key, 1), (n, d))
+    out = streaming.weighted_streaming_softmax_mean(lg, vals, chunk)
+    bounds_ = [(0, 8), (8, 23)]                    # num=2 -> one head + tail
+    mus, mls, ns = [], [], []
+    for s, e in bounds_:
+        w = jax.nn.softmax(lg[s:e])
+        mus.append(w @ vals[s:e])
+        mls.append(float(jnp.mean(lg[s:e])))
+        ns.append(e - s)
+    wc = jax.nn.softmax(jnp.asarray(mls) + jnp.log(jnp.asarray(ns, jnp.float32)))
+    ref = jnp.einsum("n,nd->d", wc, jnp.stack(mus))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_wss_combine_tail_remainder():
+    """wss_combine had the same dropped-tail bug on per-query supports."""
+    k, d, chunk = 10, 2, 4                         # remainder of 2
+    lg = jnp.zeros((3, k)).at[:, -1].set(12.0)
+    vals = jnp.broadcast_to(jnp.zeros((k, d)).at[-1].set(3.0), (3, k, d))
+    out = streaming.wss_combine(lg, vals, chunk)
+    assert np.all(np.asarray(out)[:, 0] > 0.5), np.asarray(out)
 
 
 def test_wss_is_biased_flattening():

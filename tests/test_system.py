@@ -126,7 +126,10 @@ print("PASS" if ok else "FAIL")
     import os
     env = dict(os.environ)
     env["PYTHONPATH"] = "src"
-    env.pop("JAX_PLATFORMS", None)
+    # pin the child to CPU: with libtpu installed but no TPU attached,
+    # platform autodetection hangs inside TPU client init.  The 8 fake
+    # devices come from XLA_FLAGS, which works on the CPU platform.
+    env["JAX_PLATFORMS"] = "cpu"
     r = subprocess.run([sys.executable, "-c", code], capture_output=True,
                        text=True, timeout=420, cwd="/root/repo", env=env)
     assert "PASS" in r.stdout, r.stdout + r.stderr
