@@ -14,9 +14,9 @@ import time
 import traceback
 
 from benchmarks import (engine_speedup, fig3_sensitivity, fig6_hparams,
-                        roofline, table1_complexity, table2_quality,
-                        table3_scale, table4_edm, table5_orthogonality,
-                        table6_bias)
+                        index_speedup, roofline, table1_complexity,
+                        table2_quality, table3_scale, table4_edm,
+                        table5_orthogonality, table6_bias)
 
 TABLES = {
     "table1_complexity": table1_complexity,
@@ -29,6 +29,7 @@ TABLES = {
     "fig6_hparams": fig6_hparams,
     "roofline": roofline,
     "engine_speedup": engine_speedup,
+    "index_speedup": index_speedup,
 }
 
 

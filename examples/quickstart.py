@@ -1,14 +1,20 @@
 """Quickstart: GoldDiff on the Moons toy (paper Fig. 1) in ~30 seconds.
 
-Demonstrates the whole public API surface:
-  1. build a dataset store + schedule,
+Demonstrates the whole public API surface, routed through the shipped
+``GoldDiffEngine`` hot path (kernel-layer coarse -> rerank -> aggregate
+with a compiled-program cache — not the seed-era inline jnp loops):
+  1. build a dataset store + schedule + engine-backed denoisers,
   2. watch Posterior Progressive Concentration (the golden support
      shrinking as t -> 0),
   3. verify Theorem 1's truncation bound at both noise regimes,
-  4. sample with the full-scan Optimal denoiser vs GoldDiff and compare.
+  4. sample with the full-scan Optimal denoiser vs GoldDiff — and, with
+     ``--indexed``, GoldDiff screening through the clustered Golden
+     Index (sublinear coarse stage) — and compare.
 
-  PYTHONPATH=src python examples/quickstart.py
+  PYTHONPATH=src python examples/quickstart.py [--backend xla] [--indexed]
 """
+import argparse
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -17,16 +23,29 @@ from repro.core import (GoldDiff, GoldDiffConfig, OptimalDenoiser,
                         make_schedule, sample, schedule_sizes)
 from repro.core import bounds
 from repro.data import moons
+from repro.index import ProbeSchedule, build_index
 
 
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--backend", default="xla",
+                    choices=["xla", "pallas_interpret", "pallas"],
+                    help="engine backend (pallas needs a real TPU)")
+    ap.add_argument("--indexed", action="store_true",
+                    help="also run GoldDiff with the clustered Golden "
+                         "Index serving coarse screening")
+    args = ap.parse_args()
+
     store = moons(n=2000, seed=0)
     sch = make_schedule("ddpm_linear", 1000)
-    den = OptimalDenoiser(store, sch)
-    gd = GoldDiff(den, GoldDiffConfig())
+    den = OptimalDenoiser(store, sch, backend=args.backend)
+    gd = GoldDiff(den, GoldDiffConfig(), backend=args.backend)
+    eng = gd.engine
+    print(f"engine: backend={eng.backend} strategy={eng.strategy} "
+          f"(gather/GEMM crossover ~{eng.crossover_frac:.0%} of N)")
 
     # --- 2. posterior progressive concentration -------------------------
-    print("Posterior Progressive Concentration (effective golden support):")
+    print("\nPosterior Progressive Concentration (effective golden support):")
     x0 = store.X[:16]
     key = jax.random.PRNGKey(0)
     print(f"  {'t':>5s} {'sigma_t':>10s} {'support (PR)':>14s} "
@@ -56,23 +75,41 @@ def main():
     # --- 4. sampling ------------------------------------------------------
     print("\nSampling 256 points (10 DDIM steps):")
     import time
-    t0 = time.time()
-    xs_full = sample(den, sch, (256, 2), jax.random.PRNGKey(1), num_steps=10)
-    t_full = time.time() - t0
-    t0 = time.time()
-    xs_gold = sample(gd, sch, (256, 2), jax.random.PRNGKey(1), num_steps=10)
-    t_gold = time.time() - t0
+    runs = {"full scan": den, "golddiff": gd}
+    if args.indexed:
+        # Golden Index: k-means clusters over the proxy space; nprobe_t
+        # follows g(sigma_t) (wide at low SNR, a handful at high SNR).
+        # index_mode="always" forces the indexed path so this toy
+        # (N=2000 — far below the regime where the index pays off; see
+        # BENCH_index.json for the N>=50k wall-clock claim) actually
+        # exercises it end to end.
+        index = build_index(store)
+        gd_idx = GoldDiff(OptimalDenoiser(store, sch, backend=args.backend),
+                          GoldDiffConfig(), backend=args.backend,
+                          index=index, index_mode="always",
+                          probe_schedule=ProbeSchedule(f_lo=1 / 16,
+                                                       f_hi=1 / 4,
+                                                       safety=2.0))
+        e = gd_idx.engine
+        print(f"  golden index: C={index.num_clusters} clusters, "
+              f"L={index.max_cluster}; nprobe t=999->{e.nprobe(999)} "
+              f"t=50->{e.nprobe(50)} (correctness demo at toy N)")
+        runs["golddiff+index"] = gd_idx
+    outs = {}
+    for name, d in runs.items():
+        t0 = time.time()
+        outs[name] = sample(d, sch, (256, 2), jax.random.PRNGKey(1),
+                            num_steps=10)
+        dt = time.time() - t0
 
-    def manifold_dist(xs):
-        d2 = jnp.sum((xs[:, None] - store.X[None]) ** 2, -1)
-        return float(jnp.sqrt(jnp.min(d2, -1)).mean())
-
-    print(f"  full scan : {t_full:6.2f}s  mean-dist-to-manifold="
-          f"{manifold_dist(xs_full):.4f}")
-    print(f"  golddiff  : {t_gold:6.2f}s  mean-dist-to-manifold="
-          f"{manifold_dist(xs_gold):.4f}")
-    print(f"  outputs agree: "
-          f"{float(jnp.abs(xs_full - xs_gold).mean()):.4f} mean |delta|")
+        d2 = jnp.sum((outs[name][:, None] - store.X[None]) ** 2, -1)
+        mdist = float(jnp.sqrt(jnp.min(d2, -1)).mean())
+        print(f"  {name:15s}: {dt:6.2f}s  mean-dist-to-manifold={mdist:.4f}")
+    ref = outs["full scan"]
+    for name, xs in outs.items():
+        if name != "full scan":
+            print(f"  full scan vs {name}: "
+                  f"{float(jnp.abs(ref - xs).mean()):.4f} mean |delta|")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,94 @@
+#!/usr/bin/env python
+"""Tier-2 perf gate: fail if any recorded BENCH_*.json speedup < 1.0x.
+
+Every ``BENCH_*.json`` is a flat ``name -> value`` record where timing
+cells are microseconds per call and ``recall/...`` cells are recall
+fractions in [0, 1].  Cells pair up when their names differ only by a
+(baseline, subject) method segment:
+
+  BENCH_engine.json  static/seed_eager/...   vs  static/engine_xla/...
+  BENCH_index.json   table1/exact_coarse/... vs  table1/indexed_coarse/...
+
+For each pair the speedup baseline/subject must stay >= the threshold
+(default 1.0, i.e. the optimized path never regresses past its
+baseline), and every recall cell must stay >= 0.95.  Run it from the
+repo root:
+
+  PYTHONPATH=src python scripts/check_bench.py [--threshold 1.0] [--dir .]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+# baseline method segment -> optimized method segment
+PAIRS = {
+    "seed_eager": "engine_xla",
+    "exact_coarse": "indexed_coarse",
+    "exact_step": "indexed_step",
+}
+RECALL_MIN = 0.95
+
+
+def check_file(path: str, threshold: float) -> list[str]:
+    with open(path) as f:
+        record = json.load(f)
+    failures = []
+    for name, value in sorted(record.items()):
+        if name.startswith("recall/"):
+            if value < RECALL_MIN:
+                failures.append(f"{path}: {name} = {value:.4f} < "
+                                f"{RECALL_MIN} (recall floor)")
+            continue
+        parts = name.split("/")
+        for i, seg in enumerate(parts):
+            subj = PAIRS.get(seg)
+            if subj is None:
+                continue
+            subj_name = "/".join(parts[:i] + [subj] + parts[i + 1:])
+            if subj_name not in record:
+                continue
+            subj_us = record[subj_name]
+            if subj_us <= 0:
+                failures.append(f"{path}: {subj_name} has non-positive "
+                                f"timing {subj_us}")
+                continue
+            speedup = value / subj_us
+            if speedup < threshold:
+                failures.append(
+                    f"{path}: {subj_name} speedup {speedup:.2f}x vs "
+                    f"{name} < {threshold:.2f}x")
+    return failures
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--threshold", type=float, default=1.0,
+                    help="minimum allowed baseline/optimized speedup")
+    ap.add_argument("--dir", default=".",
+                    help="directory holding the BENCH_*.json records")
+    args = ap.parse_args()
+
+    paths = sorted(glob.glob(os.path.join(args.dir, "BENCH_*.json")))
+    if not paths:
+        print(f"check_bench: no BENCH_*.json under {args.dir!r}")
+        return 1
+    failures = []
+    checked = 0
+    for p in paths:
+        fails = check_file(p, args.threshold)
+        failures.extend(fails)
+        checked += 1
+        status = "FAIL" if fails else "ok"
+        print(f"check_bench: {p}: {status}")
+    for f in failures:
+        print(f"  {f}")
+    print(f"check_bench: {checked} file(s), {len(failures)} failure(s)")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -38,17 +38,40 @@ Backend/strategy matrix::
 
     backend           screening distances     aggregation
     ----------------  ----------------------  --------------------------
-    xla               dense GEMM + lookup     scatter + GEMM
+    xla + dense       dense GEMM + lookup     scatter + GEMM
+    xla + gather      row gather + einsum     row gather + einsum
     pallas_interpret  gather + tiled kernel   gather + streaming kernel
     pallas            gather + tiled kernel   gather + streaming kernel
 
-(The xla strategy exists because XLA:CPU row gathers run ~50x slower
-per element than GEMM; on TPU the tiled VMEM kernels win.)
+The xla *strategy* (gather vs dense) is selected per platform at engine
+build time: XLA:CPU row gathers run ~50x slower per element than GEMM,
+so dense wins whenever the touched rows are a sizable fraction of N,
+but the gather form wins below the platform's crossover fraction
+(``GATHER_CROSSOVER_FRAC``, measured ~10% of N on CPU; pass
+``strategy="measure"`` to probe the live device instead of using the
+table).  On TPU the tiled VMEM kernels always gather.
+
+**Golden Index** (``index=...``): coarse screening routes through the
+IVF-clustered ``repro.index.GoldenIndex`` — a tiled centroid scan plus
+a gather of only the probed clusters' rows (``ops.ivf_screen``) — with
+the probe count nprobe_t driven by the time-aware
+``repro.index.ProbeSchedule`` (wide at low SNR, a handful of clusters
+at high SNR) plus an occupancy floor (probed windows always hold
+>= k_t real rows).  Only the proxy side lives in cluster-sorted order
+(reusing the index's own arrays); candidates map through
+``index.perm`` into ordinary dataset ids before the re-rank, so the
+[N, D] store is never duplicated.  Per-timestep, the engine falls back
+to exact dense screening when the scheduled probes would touch more
+rows than the platform's gather/GEMM crossover (``index_mode="auto"``;
+``"always"`` forces the index, e.g. for recall tests).  Program-cache
+keys extend with (nprobe_t, padded candidate count) so indexed and
+exact programs never collide.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
+import time
 
 import jax
 import jax.numpy as jnp
@@ -56,10 +79,50 @@ import numpy as np
 
 from repro.core.dataset import DatasetStore, downsample_proxy
 from repro.core.schedules import Schedule
-from repro.kernels import ops
+from repro.index.schedule import ProbeSchedule
+from repro.index.store import GoldenIndex
+from repro.kernels import ops, ref
 
 Array = jnp.ndarray
 NEG_INF = -1e30
+
+# Gather/GEMM crossover: the gather-form candidate math beats the dense
+# [B, N] GEMM once the touched rows drop below this fraction of N
+# (measured on XLA:CPU in PR 2; GPU/TPU entries are conservative tables
+# to be refined on real hardware — pass strategy="measure" to probe).
+GATHER_CROSSOVER_FRAC = {"cpu": 0.10, "gpu": 0.35, "tpu": 0.50}
+
+
+def measure_crossover(x: Array, x_norms: Array, batch: int = 8,
+                      rows: int = 2048, repeats: int = 3) -> float:
+    """Probe the live device for the gather/GEMM crossover fraction.
+
+    Times the dense [B, N] GEMM + lookup form against the gather +
+    einsum form for ``rows`` touched rows, and extrapolates the touched
+    fraction at which they break even (gather cost is ~linear in rows,
+    dense cost ~constant).  A coarse estimate is fine here: it only
+    picks a strategy, both of which are exact.
+    """
+    n = x.shape[0]
+    rows = min(rows, n)
+    q = jnp.zeros((batch, x.shape[1]), x.dtype)
+    idx = jnp.tile((jnp.arange(rows) * 997) % n, (batch, 1))
+    dense = jax.jit(lambda q, i: jnp.take_along_axis(
+        ref.pdist_ref(q, x, x_norms=x_norms), i, -1))
+    gather = jax.jit(lambda q, i: ref.support_sqdist_ref(
+        q, x[i], x_norms[i]))
+
+    def best(fn):
+        jax.block_until_ready(fn(q, idx))
+        ts = []
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(q, idx))
+            ts.append(time.perf_counter() - t0)
+        return min(ts)
+
+    t_dense, t_gather = best(dense), best(gather)
+    return float(np.clip((t_dense / t_gather) * (rows / n), 1e-3, 1.0))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -96,10 +159,16 @@ class GoldDiffEngine:
 
     def __init__(self, store: DatasetStore, schedule: Schedule,
                  cfg: GoldDiffConfig | None = None, backend: str = "xla",
-                 storage_dtype=None):
+                 storage_dtype=None, index: GoldenIndex | None = None,
+                 probe_schedule: ProbeSchedule | None = None,
+                 strategy: str = "auto", index_mode: str = "auto"):
         if backend not in ops.BACKENDS:
             raise ValueError(f"unknown backend {backend!r}; "
                              f"expected one of {ops.BACKENDS}")
+        if strategy not in ("auto", "measure", "gather", "dense"):
+            raise ValueError(f"unknown strategy {strategy!r}")
+        if index_mode not in ("auto", "always"):
+            raise ValueError(f"unknown index_mode {index_mode!r}")
         self.store = store
         self.schedule = schedule
         self.cfg = cfg or GoldDiffConfig()
@@ -115,6 +184,41 @@ class GoldDiffEngine:
         # Norms always fp32, from the master copy (exact even under bf16).
         self.x_norms = store.x_norms.astype(jnp.float32)
         self.proxy_norms = store.proxy_norms.astype(jnp.float32)
+        # -- per-platform gather-vs-dense strategy (build-time selection)
+        n = store.n
+        platform = jax.default_backend()
+        if strategy == "measure":
+            self.crossover_frac = measure_crossover(self.X, self.x_norms)
+        else:
+            self.crossover_frac = GATHER_CROSSOVER_FRAC.get(platform, 0.10)
+        if strategy in ("gather", "dense"):
+            self.strategy = strategy
+        else:
+            # the fine stage touches m_t <= m_max rows per query
+            m_max_frac = self.cfg.sizes(n)[1] / n
+            self.strategy = ("gather" if m_max_frac <= self.crossover_frac
+                             else "dense")
+        # -- Golden Index (clustered, time-aware coarse screening)
+        if index is not None and index.n != n:
+            raise ValueError(f"index built for N={index.n}, store has N={n}")
+        self.index = index
+        self.index_mode = index_mode
+        self.probe_schedule = probe_schedule or ProbeSchedule()
+        if index is not None:
+            # Only the PROXY side lives in cluster-sorted order (the
+            # index already materializes it); X is addressed through
+            # ``index.perm`` — one [B, R] int gather — instead of
+            # duplicating the whole [N, D] store in sorted order.
+            ps = index.proxy_sorted
+            if storage_dtype is not None and ps.dtype != storage_dtype:
+                ps = ps.astype(storage_dtype)
+            self.proxy_sorted = ps
+            self.proxy_norms_sorted = index.proxy_norms_sorted
+            # ascending-occupancy cumsum: worst-case row count held by
+            # any P probed windows (the nprobe occupancy floor)
+            self._occ_cum = np.cumsum(np.sort(np.diff(
+                np.asarray(index.offsets))))
+        self._nprobe: dict[int, int] = {}
         # Per-timestep schedule constants, computed host-side exactly once.
         self._consts: dict[int, tuple[float, float]] = {}
         self._sizes: dict[int, tuple[int, int]] = {}
@@ -135,33 +239,135 @@ class GoldDiffEngine:
             self._consts[t] = (a, sig2)
         return self._consts[t]
 
+    def nprobe(self, t: int) -> int:
+        """Scheduled probe count nprobe_t for a static timestep.
+
+        Beyond the ProbeSchedule value, an **occupancy floor** is
+        enforced: even the nprobe_t *smallest* windows must hold k_t
+        real rows, so the golden support can always be filled with
+        valid candidates and ``select()`` never returns padding ids.
+        """
+        if t not in self._nprobe:
+            m_t, k_t = self.sizes(t)
+            p = self.probe_schedule.nprobe(
+                self.schedule.g_np(t), m_t, self.store.n,
+                self.index.num_clusters)
+            need = int(np.searchsorted(self._occ_cum, k_t) + 1)
+            self._nprobe[t] = min(max(p, need), self.index.num_clusters)
+        return self._nprobe[t]
+
+    def padded_m(self, t: int) -> int:
+        """Indexed candidate count: the probed capacity nprobe_t * L.
+
+        IVF-Flat convention: *everything probed is re-ranked* — the
+        time-aware candidate budget is nprobe_t itself (the capacity
+        floor keeps it >= safety * m_t), and skipping the coarse top-m
+        select over the gathered rows is what makes the indexed stage
+        fast on every backend.
+        """
+        return self.nprobe(t) * self.index.max_cluster
+
+    def use_index(self, t: int) -> bool:
+        """Route coarse screening through the index at this timestep?
+
+        ``auto`` falls back to the exact dense scan whenever the probed
+        rows would exceed the platform's gather/GEMM crossover fraction
+        of N — indexed screening degrades to exact screening, never to
+        a slower program.
+        """
+        if self.index is None:
+            return False
+        if self.index_mode == "always":
+            return True
+        touched = self.nprobe(t) * self.index.max_cluster
+        return touched <= self.crossover_frac * self.store.n
+
+    def strategy_for(self, t: int) -> str:
+        """Per-step candidate-math strategy.
+
+        Indexed steps always gather: their candidate set is the probed
+        capacity (small by the use_index rule), and the dense form's
+        [B, N] GEMM would nullify the index's sublinear coarse stage.
+        Exact steps keep the build-time platform selection (sized for
+        the non-indexed m_max).
+        """
+        return "gather" if self.use_index(t) else self.strategy
+
     # -- program cache -------------------------------------------------------
     def program(self, key, build):
-        """Compiled-program cache keyed on (kind, t, shape, dtype, backend)."""
+        """Compiled-program cache keyed on (kind, t, shape, dtype,
+        backend, strategy) (+ (nprobe_t, padded candidate count) when
+        the step is indexed)."""
         if key not in self._programs:
             self._programs[key] = build()
         return self._programs[key]
 
-    def _key(self, kind: str, t, x_t: Array):
-        return (kind, t, x_t.shape, str(x_t.dtype), self.backend)
+    def _index_sig(self, t: int) -> tuple:
+        """(nprobe_t, padded candidate count) — keeps indexed and exact
+        programs for the same (t, shape) from colliding in the cache."""
+        if not self.use_index(t):
+            return ()
+        return (self.nprobe(t), self.padded_m(t))
+
+    def _key(self, kind: str, t, x_t: Array, extra: tuple = ()):
+        return (kind, t, x_t.shape, str(x_t.dtype), self.backend,
+                self.strategy_for(t)) + tuple(extra)
 
     # -- pipeline stages (traceable bodies) ----------------------------------
-    def coarse(self, q: Array, m: int) -> Array:
-        """Top-m candidates by proxy distance via ops.pdist; [B, m]."""
+    def _proxy_query(self, q: Array) -> Array:
         q_img = q.reshape(q.shape[:-1] + tuple(self.store.image_shape))
         qp = downsample_proxy(q_img, self.cfg.proxy_factor)
         if self.storage_dtype is not None:
             qp = qp.astype(self.storage_dtype)
-        d2 = ops.pdist(qp, self.proxy, x_norms=self.proxy_norms,
-                       backend=self.backend)
+        return qp
+
+    def coarse(self, q: Array, m: int) -> Array:
+        """Top-m candidates by exact proxy distance (ops.pdist); [B, m]."""
+        d2 = ops.pdist(self._proxy_query(q), self.proxy,
+                       x_norms=self.proxy_norms, backend=self.backend)
         return jax.lax.top_k(-d2, m)[1]
 
+    def coarse_indexed(self, q: Array, m: int, nprobe_max: int,
+                       nprobe=None) -> tuple[Array, Array]:
+        """Candidates via the Golden Index; O(C d + nprobe L) in the
+        capacity mode the engine uses (``m = nprobe_max * L``: every
+        probed row feeds the exact re-rank, no proxy pass needed).
+
+        Returns ``(pos, d2)`` with positions in **cluster-sorted** row
+        space (+inf ``d2`` marks slots beyond the probed capacity).
+        """
+        ix = self.index
+        return ops.ivf_screen(self._proxy_query(q), self.proxy_sorted,
+                              self.proxy_norms_sorted, ix.offsets,
+                              ix.centroids, ix.centroid_norms, m,
+                              nprobe_max, ix.max_cluster, nprobe=nprobe,
+                              backend=self.backend)
+
     def _select_body(self, q: Array, t: int) -> tuple[Array, Array]:
-        """(idx, d2) of the golden support for a rescaled query (static t)."""
+        """(idx, d2) of the golden support for a rescaled query (static
+        t).  ``idx`` are dataset row ids on both paths (indexed
+        candidates map through ``index.perm`` before the re-rank)."""
         m_t, k_t = self.sizes(t)
+        if self.use_index(t):
+            mp = self.padded_m(t)
+            pos, pd2 = self.coarse_indexed(q, mp, self.nprobe(t))
+            cand = self.index.perm[pos]
+            return ops.golden_rerank(q, self.X, cand, min(k_t, mp),
+                                     x_norms=self.x_norms,
+                                     backend=self.backend,
+                                     strategy="gather",
+                                     valid=jnp.isfinite(pd2))
         cand = self.coarse(q, m_t)
         return ops.golden_rerank(q, self.X, cand, k_t, x_norms=self.x_norms,
-                                 backend=self.backend)
+                                 backend=self.backend,
+                                 strategy=self.strategy)
+
+    def _select_ids_body(self, q: Array, t: int) -> Array:
+        """Golden support as dataset row ids.
+
+        The nprobe occupancy floor guarantees the probed windows hold
+        >= k_t real rows, so these are always valid candidates."""
+        return self._select_body(q, t)[0]
 
     def _denoise_body(self, x_t: Array, t: int) -> Array:
         """Fused static step: coarse -> rerank -> aggregate, distances
@@ -169,21 +375,27 @@ class GoldDiffEngine:
         a, sig2 = self.constants(t)
         q = x_t / a
         idx, d2 = self._select_body(q, t)
-        lg = -d2 / (2.0 * sig2)
+        # +inf distances (capacity-padded slots) clamp to NEG_INF logits
+        lg = jnp.maximum(-d2 / (2.0 * sig2), NEG_INF)
         out = ops.golden_support_aggregate(self.X, idx, lg,
-                                           backend=self.backend)
+                                           backend=self.backend,
+                                           strategy=self.strategy_for(t))
         return out.astype(x_t.dtype)
 
     # -- public entry points -------------------------------------------------
     def select(self, x_t: Array, t: int, jit: bool = True) -> Array:
-        """Golden support S_t for each query; [B, k_t] (static shapes)."""
+        """Golden support S_t for each query; [B, k_t] (static shapes).
+
+        Always returns dataset row ids (indexed steps map back through
+        ``index.perm``).
+        """
         t = int(t)
         a, _ = self.constants(t)
         if not jit:
-            return self._select_body(x_t / a, t)[0]
-        fn = self.program(self._key("select", t, x_t),
+            return self._select_ids_body(x_t / a, t)
+        fn = self.program(self._key("select", t, x_t, self._index_sig(t)),
                           lambda: jax.jit(
-                              lambda x: self._select_body(x / a, t)[0]))
+                              lambda x: self._select_ids_body(x / a, t)))
         return fn(x_t)
 
     def denoise(self, x_t: Array, t: int, jit: bool = True) -> Array:
@@ -191,17 +403,46 @@ class GoldDiffEngine:
         t = int(t)
         if not jit:
             return self._denoise_body(x_t, t)
-        fn = self.program(self._key("denoise", t, x_t),
+        fn = self.program(self._key("denoise", t, x_t, self._index_sig(t)),
                           lambda: jax.jit(
                               lambda x: self._denoise_body(x, t)))
         return fn(x_t)
 
-    def denoise_masked(self, x_t: Array, t: Array) -> Array:
-        """Scan/pjit-compatible step: shapes padded to (m_max, k_max),
-        sizes enter only through masks, ``t`` may be traced.
+    # -- masked (scan/pjit-compatible) path -----------------------------------
+    def _masked_nprobe_pad(self) -> int:
+        """Worst-case nprobe_t over the whole t grid (static pad for the
+        single masked program)."""
+        if not hasattr(self, "_nprobe_pad"):
+            T = self.schedule.num_steps
+            self._nprobe_pad = max(self.nprobe(t) for t in range(1, T + 1))
+        return self._nprobe_pad
 
-        Exact candidate distances are computed exactly once (over m_max)
-        and the selected ones are reused for the aggregation softmax.
+    def _use_index_masked(self) -> bool:
+        """The masked path is ONE program, so the indexed/exact decision
+        is global: index only when even the worst-case probe width stays
+        below the gather/GEMM crossover.
+
+        ``index_mode="always"`` bypasses that guard: with a wide
+        schedule (the default ProbeSchedule has f_hi = 1.0) the single
+        program then pays worst-case probes — near the whole store —
+        at EVERY step.  That mode exists for correctness testing; for
+        performance use "auto", or a capped schedule (see
+        ``benchmarks.index_speedup.SCALE_PROBES``)."""
+        if self.index is None:
+            return False
+        if self.index_mode == "always":
+            return True
+        touched = self._masked_nprobe_pad() * self.index.max_cluster
+        return touched <= self.crossover_frac * self.store.n
+
+    def denoise_masked(self, x_t: Array, t: Array) -> Array:
+        """Scan/pjit-compatible step: shapes padded to (m_max, k_max)
+        — or to the probed capacity when indexed — sizes enter only
+        through masks, ``t`` may be traced.
+
+        Exact candidate distances are computed exactly once (over the
+        padded candidate count) and the selected ones are reused for the
+        aggregation softmax.
         """
         n = self.store.n
         m_min, m_max, k_min, k_max = self.cfg.sizes(n)
@@ -211,21 +452,46 @@ class GoldDiffEngine:
         a = jnp.asarray(self.schedule.a)[t]
         sig = jnp.asarray(self.schedule.b)[t] / a
         q = x_t / a
-        cand = self.coarse(q, m_max)                        # top-m sorted
+        if self._use_index_masked():
+            # probe width varies with the traced t through the mask; the
+            # gather is padded to the worst-case nprobe over the t grid.
+            # All probed rows are candidates (IVF-Flat), so the
+            # time-aware candidate budget is nprobe_t, not the m_t mask.
+            p_pad = self._masked_nprobe_pad()
+            m_pad = p_pad * self.index.max_cluster
+            nprobe_t = self.probe_schedule.nprobe_jnp(
+                g, m_t, n, self.index.num_clusters)
+            # static occupancy floor (worst k over the grid): the probed
+            # windows must hold k_t real rows here too, like nprobe()
+            need = int(np.searchsorted(self._occ_cum, k_max) + 1)
+            nprobe_t = jnp.maximum(
+                nprobe_t, min(need, self.index.num_clusters))
+            pos, pd2 = self.coarse_indexed(q, m_pad, p_pad, nprobe=nprobe_t)
+            cand = self.index.perm[pos]
+            cand_mask = jnp.isfinite(pd2)
+            strategy = "gather"          # dense [B, N] math would void
+        else:                            # the index's sublinear coarse
+            m_pad = m_max
+            cand = self.coarse(q, m_max)                    # top-m sorted
+            cand_mask = jnp.arange(m_pad)[None, :] < m_t
+            strategy = self.strategy
+        k_pad = min(k_max, m_pad)
         d2 = ops.support_distances(q, self.X, cand, x_norms=self.x_norms,
-                                   backend=self.backend)
-        cand_mask = jnp.arange(m_max)[None, :] < m_t
+                                   backend=self.backend,
+                                   strategy=strategy)
         d2 = jnp.where(cand_mask, d2, jnp.inf)
-        neg, pos = jax.lax.top_k(-d2, k_max)
+        neg, pos = jax.lax.top_k(-d2, k_pad)
         idx = jnp.take_along_axis(cand, pos, axis=-1)
         # selection distances (neg == -d2) reused for the softmax
-        # (k_max <= m_min <= m_t, so every selected candidate is valid
-        # and the distances are finite)
-        lg = neg / (2.0 * sig * sig)
-        k_mask = jnp.arange(k_max)[None, :] < k_t
+        # (k_max <= m_min <= m_t, so in the exact path every selected
+        # candidate is valid; indexed capacity-padded slots carry -inf
+        # and clamp to NEG_INF -> zero weight)
+        lg = jnp.maximum(neg / (2.0 * sig * sig), NEG_INF)
+        k_mask = jnp.arange(k_pad)[None, :] < k_t
         lg = jnp.where(k_mask, lg, NEG_INF)
         out = ops.golden_support_aggregate(self.X, idx, lg,
-                                           backend=self.backend)
+                                           backend=self.backend,
+                                           strategy=strategy)
         return out.astype(x_t.dtype)
 
     def full_scan(self, x_t: Array, t: int, jit: bool = True) -> Array:

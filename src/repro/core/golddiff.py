@@ -87,16 +87,20 @@ def golden_select(store: DatasetStore, q: Array, cand: Array, k: int,
 class GoldDiff:
     """Plug-and-play wrapper: GoldDiff(base_denoiser) (paper Tab. 5).
 
-    ``backend`` / ``storage_dtype`` configure the execution engine
-    (see :class:`GoldDiffEngine`); ``backend=None`` (default) inherits
-    the base denoiser's backend so the fused path and the explicit
-    ``support=`` path run the same kernels.  ``xla`` is the fast path on
-    CPU, ``pallas`` lowers the TPU kernels.
+    ``backend`` / ``storage_dtype`` / ``strategy`` configure the
+    execution engine (see :class:`GoldDiffEngine`); ``backend=None``
+    (default) inherits the base denoiser's backend so the fused path and
+    the explicit ``support=`` path run the same kernels.  ``xla`` is the
+    fast path on CPU, ``pallas`` lowers the TPU kernels.  Pass
+    ``index=repro.index.build_index(store)`` to route coarse screening
+    through the clustered Golden Index (sublinear in N; probe width set
+    by ``probe_schedule``).
     """
 
     def __init__(self, base, cfg: GoldDiffConfig | None = None,
                  jit_steps: bool = True, backend: str | None = None,
-                 storage_dtype=None):
+                 storage_dtype=None, index=None, probe_schedule=None,
+                 strategy: str = "auto", index_mode: str = "auto"):
         self.base = base
         self.cfg = cfg or GoldDiffConfig()
         self.store: DatasetStore = base.store
@@ -110,7 +114,11 @@ class GoldDiff:
             backend = getattr(base, "backend", "xla")
         self.engine = GoldDiffEngine(self.store, self.schedule, self.cfg,
                                      backend=backend,
-                                     storage_dtype=storage_dtype)
+                                     storage_dtype=storage_dtype,
+                                     index=index,
+                                     probe_schedule=probe_schedule,
+                                     strategy=strategy,
+                                     index_mode=index_mode)
 
     @property
     def backend(self) -> str:
@@ -139,9 +147,10 @@ class GoldDiff:
             self.base._dataset_features(self.base.patch_size(t))
         a, _ = self.engine.constants(t)
         fn = self.engine.program(
-            self.engine._key(("wrap", self.base.name), t, x_t),
+            self.engine._key(("wrap", self.base.name), t, x_t,
+                             self.engine._index_sig(t)),
             lambda: jax.jit(lambda x: self.base(
-                x, t, support=self.engine._select_body(x / a, t)[0])))
+                x, t, support=self.engine._select_ids_body(x / a, t))))
         return fn(x_t)
 
     # -- masked (scan-compatible) mode ----------------------------------------

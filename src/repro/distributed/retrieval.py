@@ -21,16 +21,29 @@ through the kernel ops layer (``repro.kernels.ops``, ``backend="xla"``:
 shard_map bodies compile for whatever mesh platform is active, where
 Pallas TPU kernels may not lower), so the matmul-form distances here are
 the exact same code the single-host GoldDiffEngine runs.
+
+**Shard-local Golden Index** (``build_shard_indexes`` +
+``distributed_golden_denoise(..., index=...)``): each shard clusters its
+*own* rows with k-means and step 1 becomes an IVF probe
+(``ops.ivf_screen``) over only the probed clusters' local rows — the
+coarse stage is sublinear per shard, O(C d + nprobe L d) instead of
+O(N/S d), while steps 2-4 (local exact re-rank, two-stage top-k,
+LSE-merged aggregation) are unchanged, so the merged estimate stays
+bit-comparable to the single-host indexed engine.
 """
 from __future__ import annotations
 
 import functools
+import math
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.dataset import DatasetStore, downsample_proxy
+from repro.index.store import build_index
 from repro.kernels import ops
 
 Array = jnp.ndarray
@@ -61,26 +74,127 @@ def shard_store(store: DatasetStore, mesh: Mesh, axis: str = "data"
     )
 
 
+class ShardedIndex(NamedTuple):
+    """One GoldenIndex per dataset shard, stacked on a leading shard axis
+    (every per-shard array is placed sharded over the mesh ``axis``, so
+    inside ``shard_map`` each shard sees exactly its own index).
+    ``perm`` maps cluster-sorted *local* positions to local row ids."""
+
+    centroids: Array           # [S, C, dp]
+    centroid_norms: Array      # [S, C]
+    perm: Array                # [S, n_loc] int32 (local row ids)
+    offsets: Array             # [S, C + 1] int32
+    proxy_sorted: Array        # [S, n_loc, dp]
+    proxy_norms_sorted: Array  # [S, n_loc]
+    max_cluster: int           # global max cluster size (static pad width)
+
+    @property
+    def num_clusters(self) -> int:
+        return self.centroids.shape[1]
+
+
+def build_shard_indexes(store: DatasetStore, mesh: Mesh, axis: str = "data",
+                        num_clusters: int | None = None,
+                        key: Array | None = None, iters: int = 25
+                        ) -> ShardedIndex:
+    """Cluster each shard's rows independently (host-side, at setup).
+
+    Takes the same *unsharded* store as ``shard_store`` and mirrors its
+    padding, so the stacked per-shard arrays line up row-for-row with
+    the sharded dataset.  Padded rows keep +inf proxy norms and are
+    never screened in.
+    """
+    n_sh = mesh.shape[axis]
+    n = store.n
+    n_loc = -(-n // n_sh)
+    pad = n_loc * n_sh - n
+    proxy = jnp.pad(store.proxy, ((0, pad), (0, 0)))
+    pnorms = jnp.pad(store.proxy_norms, (0, pad), constant_values=jnp.inf)
+    c = num_clusters or max(4, int(round(math.sqrt(n_loc))))
+    key = jax.random.PRNGKey(0) if key is None else key
+    parts = []
+    for s in range(n_sh):
+        rows = slice(s * n_loc, (s + 1) * n_loc)
+        sub = DatasetStore(X=proxy[rows], proxy=proxy[rows],
+                           x_norms=pnorms[rows], proxy_norms=pnorms[rows],
+                           image_shape=store.image_shape)
+        parts.append(build_index(sub, num_clusters=c,
+                                 key=jax.random.fold_in(key, s),
+                                 iters=iters))
+    # balance chunking can yield different window counts per shard; pad
+    # every shard to the widest with empty never-probed windows (+inf
+    # centroid norms, zero-row CSR spans)
+    w = max(p.num_clusters for p in parts)
+
+    def pad_part(p):
+        extra = w - p.num_clusters
+        return dict(
+            centroids=jnp.pad(p.centroids, ((0, extra), (0, 0))),
+            centroid_norms=jnp.pad(p.centroid_norms, (0, extra),
+                                   constant_values=jnp.inf),
+            offsets=jnp.pad(p.offsets, (0, extra), mode="edge"),
+            perm=p.perm, proxy_sorted=p.proxy_sorted,
+            proxy_norms_sorted=p.proxy_norms_sorted)
+
+    padded = [pad_part(p) for p in parts]
+    sh = NamedSharding(mesh, P(axis))
+    stack = lambda f: jax.device_put(
+        jnp.stack([p[f] for p in padded]), sh)
+    return ShardedIndex(
+        centroids=stack("centroids"),
+        centroid_norms=stack("centroid_norms"),
+        perm=stack("perm"),
+        offsets=stack("offsets"),
+        proxy_sorted=stack("proxy_sorted"),
+        proxy_norms_sorted=stack("proxy_norms_sorted"),
+        max_cluster=max(p.max_cluster for p in parts),
+    )
+
+
 def distributed_golden_denoise(store: DatasetStore, mesh: Mesh, q: Array,
                                sigma2: float, m: int, k: int,
-                               proxy_factor: int = 4,
-                               axis: str = "data") -> Array:
-    """Full GoldDiff step, shard-parallel.  q: [B, D] (rescaled query)."""
+                               proxy_factor: int = 4, axis: str = "data",
+                               index: ShardedIndex | None = None,
+                               nprobe: int | None = None) -> Array:
+    """Full GoldDiff step, shard-parallel.  q: [B, D] (rescaled query).
+
+    With ``index`` (from ``build_shard_indexes``), each shard's coarse
+    screen probes ``nprobe`` of its local clusters instead of scanning
+    every local row (defaults to a quarter of the clusters; pick
+    per-timestep values with ``repro.index.ProbeSchedule``).
+    """
     n_sh = mesh.shape[axis]
     m_loc = max(1, -(-m // n_sh))
     k_loc = max(1, -(-k // n_sh))
+    if index is not None:
+        nprobe = nprobe or max(1, -(-index.num_clusters // 4))
+        nprobe = min(nprobe, index.num_clusters)
+        m_loc = min(m_loc, nprobe * index.max_cluster)
 
-    def local(x_sh, xn_sh, proxy_sh, pn_sh, q_rep):
-        # 1. local coarse screening via the ops layer (matmul-form pdist;
-        #    +inf norms on padded rows exclude them from every top-k)
+    def local(x_sh, xn_sh, proxy_sh, pn_sh, q_rep, *ix):
+        # 1. local coarse screening via the ops layer — exact matmul-form
+        #    pdist, or the shard-local IVF probe when an index is given
+        #    (+inf norms on padded rows exclude them from every top-k)
         q_img = q_rep.reshape(q_rep.shape[:-1] + tuple(store.image_shape))
         qp = downsample_proxy(q_img, proxy_factor)
-        d2p = ops.pdist(qp, proxy_sh, x_norms=pn_sh, backend="xla")
-        _, cand = jax.lax.top_k(-d2p, min(m_loc, x_sh.shape[0]))
+        if ix:
+            cents, cnorms, perm, offsets, psort, pnsort = (
+                a.squeeze(0) for a in ix)
+            mm = min(m_loc, x_sh.shape[0])
+            pos, pd2 = ops.ivf_screen(qp, psort, pnsort, offsets, cents,
+                                      cnorms, mm, nprobe,
+                                      index.max_cluster, backend="xla")
+            cand = perm[pos]                               # local row ids
+            screen_valid = jnp.isfinite(pd2)
+        else:
+            d2p = ops.pdist(qp, proxy_sh, x_norms=pn_sh, backend="xla")
+            _, cand = jax.lax.top_k(-d2p, min(m_loc, x_sh.shape[0]))
+            screen_valid = True
         # 2. local exact re-rank inside candidates (matmul form over the
         #    gathered rows — no [B, m_loc, D] subtract temporaries)
         xc = x_sh[cand]                                    # [B, m_loc, D]
         d2 = ops.support_sqdist(q_rep, xc, xn_sh[cand], backend="xla")
+        d2 = jnp.where(screen_valid, d2, jnp.inf)
         kk = min(k_loc, d2.shape[-1])
         neg, pos = jax.lax.top_k(-d2, kk)
         # 3. global top-k over gathered local winners
@@ -104,11 +218,17 @@ def distributed_golden_denoise(store: DatasetStore, mesh: Mesh, q: Array,
         return acc_g / jnp.maximum(l_g, 1e-30)[:, None]
 
     spec_row = P(axis)
-    kw = dict(mesh=mesh, in_specs=(spec_row, spec_row, spec_row, spec_row,
-                                   P()), out_specs=P())
+    ix_args = () if index is None else (
+        index.centroids, index.centroid_norms, index.perm, index.offsets,
+        index.proxy_sorted, index.proxy_norms_sorted)
+    kw = dict(mesh=mesh,
+              in_specs=(spec_row, spec_row, spec_row, spec_row, P())
+              + (spec_row,) * len(ix_args),
+              out_specs=P())
     if hasattr(jax, "shard_map"):                  # jax >= 0.6
         mapped = jax.shard_map(local, check_vma=False, **kw)
     else:                                          # jax 0.4.x
         from jax.experimental.shard_map import shard_map
         mapped = shard_map(local, check_rep=False, **kw)
-    return mapped(store.X, store.x_norms, store.proxy, store.proxy_norms, q)
+    return mapped(store.X, store.x_norms, store.proxy, store.proxy_norms, q,
+                  *ix_args)

@@ -1,0 +1,94 @@
+"""JAX k-means over the proxy embedding (the Golden Index builder).
+
+k-means++ seeding (Arthur & Vassilvitskii, 2007) followed by batched
+Lloyd iterations, all in the matmul distance form the kernel layer uses
+(``||p - c||^2 = ||p||^2 + ||c||^2 - 2 p.c``), so the builder is a
+sequence of [N, C] GEMMs — fast on every backend and deterministic under
+a fixed PRNG key (tested in ``tests/test_index.py``).
+
+Empty clusters are re-seeded each Lloyd iteration to the point farthest
+from its assigned centroid, which doubles as a crude balance heuristic:
+oversized clusters with distant outliers donate a point that becomes a
+new centroid, splitting them on the next assignment pass.  Balance
+matters because the IVF gather pads every probed cluster to the max
+cluster size L (static shapes), so the probed-row cost is
+``nprobe * L`` rather than ``nprobe * N/C``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ref import pdist_ref
+
+Array = jnp.ndarray
+
+
+def _sq_dists(p: Array, c: Array) -> Array:
+    """[N, C] squared distances — the kernel layer's reference math."""
+    return pdist_ref(p, c)
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def kmeans_plusplus(key: Array, points: Array, k: int) -> Array:
+    """k-means++ seeding: [N, d] -> [k, d] initial centroids.
+
+    Sequential by construction (each seed conditions on the previous
+    ones) but each step is a single [N] distance update, so the whole
+    pass is O(k N d).
+    """
+    n, d = points.shape
+    p32 = points.astype(jnp.float32)
+    first = jax.random.randint(key, (), 0, n)
+    cents = jnp.zeros((k, d), jnp.float32).at[0].set(p32[first])
+    min_d2 = jnp.sum((p32 - p32[first]) ** 2, -1)
+
+    def step(i, carry):
+        cents, min_d2 = carry
+        ki = jax.random.fold_in(key, i)
+        # sample proportional to the current squared distance (the ++
+        # rule); gumbel-max over log-probs keeps it jit-friendly
+        logits = jnp.log(jnp.maximum(min_d2, 1e-30))
+        nxt = jax.random.categorical(ki, logits)
+        c = p32[nxt]
+        cents = cents.at[i].set(c)
+        min_d2 = jnp.minimum(min_d2, jnp.sum((p32 - c) ** 2, -1))
+        return cents, min_d2
+
+    cents, _ = jax.lax.fori_loop(1, k, step, (cents, min_d2))
+    return cents
+
+
+@functools.partial(jax.jit, static_argnames=("k", "iters"))
+def kmeans(key: Array, points: Array, k: int, iters: int = 25
+           ) -> tuple[Array, Array]:
+    """Batched Lloyd iterations.  [N, d] -> (centroids [k, d], assign [N]).
+
+    Deterministic under a fixed ``key``; empty clusters are re-seeded to
+    the globally farthest point from its centroid.
+    """
+    n = points.shape[0]
+    p32 = points.astype(jnp.float32)
+    cents0 = kmeans_plusplus(key, points, k)
+
+    def lloyd(_, cents):
+        d2 = _sq_dists(p32, cents)
+        assign = jnp.argmin(d2, -1)
+        counts = jnp.zeros((k,), jnp.float32).at[assign].add(1.0)
+        sums = jnp.zeros_like(cents).at[assign].add(p32)
+        new = sums / jnp.maximum(counts, 1.0)[:, None]
+        # re-seed empty clusters, each to a DISTINCT far point (the e-th
+        # empty cluster takes the e-th farthest-from-its-centroid point,
+        # splitting crowded clusters on the next pass; a shared seed
+        # would leave all but one of them empty again)
+        empty = counts == 0.0
+        far = jax.lax.top_k(jnp.min(d2, -1), k)[1]          # [k] farthest
+        rank = jnp.clip(jnp.cumsum(empty) - 1, 0, k - 1)    # e per cluster
+        new = jnp.where(empty[:, None], p32[far[rank]], new)
+        return new
+
+    cents = jax.lax.fori_loop(0, iters, lloyd, cents0)
+    assign = jnp.argmin(_sq_dists(p32, cents), -1).astype(jnp.int32)
+    return cents, assign

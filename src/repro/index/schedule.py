@@ -1,0 +1,63 @@
+"""Time-aware probe schedule: how many clusters to visit at noise sigma_t.
+
+Posterior Progressive Concentration (paper Eqs. 4/6) drives the probe
+count exactly the way it drives (m_t, k_t): the normalized noise level
+g(sigma_t) in [0, 1] interpolates between two probed fractions of the
+C clusters,
+
+    nprobe_t = ceil(C * (f_lo + (f_hi - f_lo) * g(sigma_t)))
+
+wide at low SNR (g -> 1: the posterior is diffuse, probes approach the
+whole index — and per the Gaussian-score regime the coarse stage is
+forgiving there, so width costs recall nothing) and a handful of
+clusters at high SNR (g -> 0: the golden support has collapsed onto a
+local neighborhood that a few nearest clusters cover).
+
+Two safety terms keep recall honest:
+
+* **capacity floor** — probed clusters must plausibly *hold* the
+  paper's candidate budget m_t, so nprobe_t is floored at
+  ``ceil(safety * m_t * C / N)`` (safety > 1 buys slack for cluster
+  imbalance and boundary misses);
+* **min_probes** — an absolute minimum number of clusters.
+
+When the floor pushes nprobe_t past the platform's gather/GEMM
+crossover the engine falls back to exact dense screening for that
+timestep (see ``GoldDiffEngine``) — the index degrades to exact
+screening, never to silent recall loss.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class ProbeSchedule:
+    """nprobe_t = clip(max(snr_term, capacity_floor, min_probes), 1, C)."""
+
+    f_lo: float = 1 / 16     # probed fraction of clusters at g = 0 (high SNR)
+    f_hi: float = 1.0        # probed fraction at g = 1 (low SNR)
+    safety: float = 2.0      # capacity floor: probed rows >= safety * m_t
+    min_probes: int = 4
+
+    def nprobe(self, g: float, m_t: int, n: int, num_clusters: int) -> int:
+        """Host-side probe count for a static timestep."""
+        c = num_clusters
+        snr = math.ceil(c * (self.f_lo + (self.f_hi - self.f_lo) * g))
+        cap = math.ceil(self.safety * m_t * c / n)
+        return int(min(max(snr, cap, self.min_probes, 1), c))
+
+    def nprobe_jnp(self, g: Array, m_t: Array, n: int,
+                   num_clusters: int) -> Array:
+        """Traced mirror of :meth:`nprobe` for the masked (scan/pjit)
+        path, where g and m_t come from a traced timestep."""
+        c = num_clusters
+        snr = jnp.ceil(c * (self.f_lo + (self.f_hi - self.f_lo) * g))
+        cap = jnp.ceil(self.safety * m_t.astype(jnp.float32) * c / n)
+        lo = jnp.maximum(jnp.maximum(snr, cap), float(self.min_probes))
+        return jnp.clip(lo, 1, c).astype(jnp.int32)

@@ -1,0 +1,134 @@
+"""The immutable GoldenIndex store (IVF layout over the proxy space).
+
+Layout: dataset rows are *permuted into cluster-sorted order* so every
+cluster's rows are contiguous — the probed-cluster window in
+``ops.ivf_screen`` is then ``offsets[c] + arange(L)`` per probe, pure
+index arithmetic.  Only the proxy arrays are materialized in sorted
+order (here, once); the engine maps candidate positions through
+``perm`` back to ordinary dataset ids before the exact re-rank, so the
+big [N, D] store is never duplicated.
+
+``max_cluster`` (the padded per-probe row count L) is a host ``int`` so
+it can shape static programs; everything else is a device array.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.dataset import DatasetStore
+from repro.index.build import kmeans
+
+Array = jnp.ndarray
+
+
+class GoldenIndex(NamedTuple):
+    centroids: Array           # [C, dp] fp32 cluster centers (proxy space)
+    centroid_norms: Array      # [C]     ||c||^2 (fp32)
+    perm: Array                # [N] int32: sorted row r is dataset row perm[r]
+    offsets: Array             # [C+1] int32 CSR cluster boundaries
+    proxy_sorted: Array        # [N, dp] proxy rows in cluster-sorted order
+    proxy_norms_sorted: Array  # [N]     ||proxy||^2, sorted (keeps +inf pads)
+    max_cluster: int           # L: largest cluster size (static pad width)
+
+    @property
+    def num_clusters(self) -> int:
+        return self.centroids.shape[0]
+
+    @property
+    def n(self) -> int:
+        return self.perm.shape[0]
+
+
+def default_num_clusters(n: int) -> int:
+    """sqrt-N rule: C ~ sqrt(N) balances the centroid scan (O(C d)) with
+    the probed-row term (O(nprobe * N/C * d))."""
+    return int(np.clip(round(np.sqrt(n)), 4, n))
+
+
+def build_index(store: DatasetStore, num_clusters: int | None = None,
+                key: Array | None = None, iters: int = 25,
+                balance: float = 1.5) -> GoldenIndex:
+    """Cluster the proxy embedding and lay out the CSR index.
+
+    Deterministic under a fixed ``key`` (defaults to PRNGKey(0)).
+
+    ``balance`` caps the padded probe width: any cluster larger than
+    ``ceil(balance * N / C)`` is split into consecutive CSR *windows*
+    that share (duplicate) its centroid — the standard balanced-IVF
+    chunking.  Probing then pays ``nprobe * L`` for L near the mean
+    cluster size instead of the max, which matters because every probed
+    window is padded to ``max_cluster`` for static shapes.  Windows of a
+    split cluster tie on centroid distance, so wide clusters simply
+    consume several adjacent probe slots.
+    """
+    n = store.n
+    c = int(np.clip(num_clusters or default_num_clusters(n), 1, n))
+    key = jax.random.PRNGKey(0) if key is None else key
+    cents, assign = kmeans(key, store.proxy, c, iters=iters)
+    assign_np = np.asarray(assign)
+    perm = np.argsort(assign_np, kind="stable").astype(np.int32)
+    counts = np.bincount(assign_np, minlength=c)
+    cents_np = np.asarray(cents, np.float32)
+    cap = max(1, int(np.ceil(balance * n / c)))
+    # split oversized clusters into <=cap windows (duplicated centroids)
+    win_cents, win_sizes = [], []
+    for ci in range(c):
+        size = int(counts[ci])
+        pieces = max(1, -(-size // cap))
+        base = size // pieces
+        rem = size - base * pieces
+        for p in range(pieces):
+            win_cents.append(cents_np[ci])
+            win_sizes.append(base + (1 if p < rem else 0))
+    offsets = np.concatenate(
+        [[0], np.cumsum(win_sizes)]).astype(np.int32)
+    cents = jnp.asarray(np.stack(win_cents), jnp.float32)
+    return GoldenIndex(
+        centroids=cents,
+        centroid_norms=jnp.sum(cents * cents, -1),
+        perm=jnp.asarray(perm),
+        offsets=jnp.asarray(offsets),
+        proxy_sorted=store.proxy[perm],
+        # gather (not recompute) so +inf markers on padded/masked rows
+        # survive into the sorted view and keep excluding those rows
+        proxy_norms_sorted=store.proxy_norms[perm].astype(jnp.float32),
+        max_cluster=int(max(win_sizes)),
+    )
+
+
+def screening_recall(pos, d2, perm, exact_ids) -> float:
+    """recall@m of indexed screening vs exact screening (host-side).
+
+    Fraction of the exact top-m candidate ids (``exact_ids`` [B, m])
+    present among the *selectable* indexed candidates — positions
+    ``pos`` whose ``d2`` is finite; capacity-padding slots are masked
+    +inf downstream and must not inflate recall — mapped through
+    ``perm`` to dataset ids, averaged over the batch.  Shared by
+    ``tests/test_index.py`` and ``benchmarks/index_speedup.py`` so the
+    gated metric and the tested metric cannot drift apart.
+    """
+    pos = np.asarray(pos)
+    fin = np.isfinite(np.asarray(d2))
+    perm = np.asarray(perm)
+    exact = np.asarray(exact_ids)
+    m = exact.shape[1]
+    return float(np.mean([
+        len(set(perm[pos[b][fin[b]]]) & set(exact[b])) / m
+        for b in range(exact.shape[0])]))
+
+
+def save_index(index: GoldenIndex, path: str) -> None:
+    np.savez(path, **{f: np.asarray(getattr(index, f))
+                      for f in GoldenIndex._fields})
+
+
+def load_index(path: str) -> GoldenIndex:
+    with np.load(path) as z:
+        fields = {f: z[f] for f in GoldenIndex._fields}
+    fields["max_cluster"] = int(fields["max_cluster"])
+    return GoldenIndex(**{f: v if f == "max_cluster" else jnp.asarray(v)
+                          for f, v in fields.items()})

@@ -18,14 +18,23 @@ multi-pod dry-run, and real TPUs.
                           lower)
 
 Strategy note (measured on XLA:CPU): row gathers run ~50x slower per
-element than GEMM, so the "xla" backend computes re-rank distances in
-the *dense* form (one [B, N] GEMM + O(B m) scalar lookups) and
-aggregates by scattering the k softmax weights into [B, N] and doing a
-second GEMM — ~10x faster end-to-end than gathering [B, m, D] rows on
-CPU.  The Pallas backends use the tiled gather kernels, the right shape
-for TPU (MXU matmuls over VMEM tiles, DMA gathers).  Both paths compute
-the same math with fp32 accumulation; parity is asserted in
-``tests/test_engine.py``.
+element than GEMM, so by default the "xla" backend computes re-rank
+distances in the *dense* form (one [B, N] GEMM + O(B m) scalar lookups)
+and aggregates by scattering the k softmax weights into [B, N] and
+doing a second GEMM — ~10x faster end-to-end than gathering [B, m, D]
+rows on CPU *when m is a sizable fraction of N*.  The crossover flips
+once the touched rows drop below ~10% of N on CPU (much higher on
+GPU/TPU), which is exactly the regime the Golden Index creates, so
+``support_distances`` / ``golden_support_aggregate`` accept an explicit
+``strategy`` ("dense" | "gather") that ``GoldDiffEngine`` selects per
+platform at build time instead of hard-coding by backend.  The Pallas
+backends always use the tiled gather kernels, the right shape for TPU
+(MXU matmuls over VMEM tiles, DMA gathers).  All paths compute the same
+math with fp32 accumulation; parity is asserted in
+``tests/test_engine.py`` / ``tests/test_index.py``.
+
+``ivf_screen`` + ``centroid_scan`` are the indexed (sublinear) coarse
+stage over a ``repro.index.GoldenIndex`` layout.
 """
 from __future__ import annotations
 
@@ -33,6 +42,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
+from repro.kernels.centroid_scan import centroid_scan as _cscan
 from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.golden_aggregate import golden_aggregate as _agg
 from repro.kernels.golden_attention import (golden_attention_decode as _gattn,
@@ -63,45 +73,124 @@ def support_sqdist(q, xs, x_norms, backend: str = DEFAULT_BACKEND, **kw):
 
 
 def support_distances(q, x, idx, x_norms=None,
-                      backend: str = DEFAULT_BACKEND, **kw):
+                      backend: str = DEFAULT_BACKEND,
+                      strategy: str | None = None, **kw):
     """Exact distances q -> x[idx] with no [B, m, D] subtract temporaries.
 
-    xla: dense form (one [B, N] GEMM + scalar lookup — no row gathers).
-    pallas*: row gather + tiled matmul-form kernel.
+    ``strategy`` picks the candidate-math form on the xla backend:
+    "dense" (one [B, N] GEMM + scalar lookup — no row gathers) or
+    "gather" ([B, m, D] row gather + matmul-form distances, sublinear in
+    N).  ``None`` keeps the historical per-backend default ("dense" on
+    xla).  The pallas backends always gather — tiled VMEM kernels are
+    the TPU shape regardless.
     """
     if x_norms is None:
         x_norms = jnp.sum(x.astype(jnp.float32) ** 2, -1)
     if backend == "xla":
-        d2_all = ref.pdist_ref(q, x, x_norms=x_norms)
-        return jnp.take_along_axis(d2_all, idx, axis=-1)
+        if (strategy or "dense") == "dense":
+            d2_all = ref.pdist_ref(q, x, x_norms=x_norms)
+            return jnp.take_along_axis(d2_all, idx, axis=-1)
+        return ref.support_sqdist_ref(q, x[idx], x_norms[idx])
     return support_sqdist(q, x[idx], x_norms[idx], backend=backend, **kw)
 
 
 def golden_rerank(q, x, cand, k: int, x_norms=None,
-                  backend: str = DEFAULT_BACKEND, **kw):
+                  backend: str = DEFAULT_BACKEND,
+                  strategy: str | None = None, valid=None, **kw):
     """Exact re-rank inside the candidate set (paper Eq. 5).
 
     Returns ``(idx, d2)``: top-k dataset indices [B, k] AND their exact
     squared distances [B, k] (sorted ascending), so the caller reuses
     selection distances for the aggregation softmax instead of
-    recomputing them.
+    recomputing them.  ``valid`` (bool [B, m], optional) masks padded
+    candidate slots (e.g. clipped rows from a capacity-padded
+    ``ivf_screen``) to +inf so they are selected last and weightless.
     """
-    d2 = support_distances(q, x, cand, x_norms, backend=backend, **kw)
+    d2 = support_distances(q, x, cand, x_norms, backend=backend,
+                           strategy=strategy, **kw)
+    if valid is not None:
+        d2 = jnp.where(valid, d2, jnp.inf)
     neg, pos = jax.lax.top_k(-d2, k)
     return jnp.take_along_axis(cand, pos, axis=-1), -neg
 
 
 def golden_support_aggregate(x, idx, logits, backend: str = DEFAULT_BACKEND,
-                             **kw):
+                             strategy: str | None = None, **kw):
     """softmax(logits)-weighted mean of x[idx] per query -> [B, D] fp32.
 
     ``logits`` come from re-ranking distances (masking is the caller's
-    job: NEG_INF entries get zero weight).  xla: scatter + GEMM;
-    pallas*: gather + streaming online-softmax kernel.
+    job: NEG_INF entries get zero weight).  xla: scatter + GEMM
+    (``strategy="dense"``, the default) or row gather + einsum
+    (``strategy="gather"``, sublinear in N); pallas*: gather + streaming
+    online-softmax kernel.
     """
     if backend == "xla":
-        return ref.scatter_aggregate_ref(x, idx, logits)
+        if (strategy or "dense") == "dense":
+            return ref.scatter_aggregate_ref(x, idx, logits)
+        return ref.golden_support_aggregate_ref(x[idx], logits)
     return _sagg(x[idx], logits, interpret=(backend != "pallas"), **kw)
+
+
+def centroid_scan(q, centroids, c_norms=None, backend: str = DEFAULT_BACKEND,
+                  **kw):
+    """Query -> k-means-centroid distances [B, C] (IVF level 1, fp32)."""
+    if backend == "xla":
+        return ref.pdist_ref(q, centroids, x_norms=c_norms)
+    return _cscan(q, centroids, c_norms, interpret=(backend != "pallas"),
+                  **kw)
+
+
+def ivf_screen(qp, proxy_sorted, proxy_norms_sorted, offsets, centroids,
+               centroid_norms, m: int, nprobe_max: int, max_cluster: int,
+               nprobe=None, backend: str = DEFAULT_BACKEND, **kw):
+    """Two-level indexed coarse screening (GoldenIndex layout).
+
+    Level 1: tiled centroid scan + top-``nprobe_max`` probe selection.
+    Level 2: gather ONLY the probed clusters' rows (CSR windows padded
+    to the static ``max_cluster`` width L) and compute matmul-form
+    proxy distances over those ``nprobe_max * L`` rows — O(C d +
+    nprobe L d) per query instead of the dense O(N d) scan.
+
+    ``nprobe`` (defaults to ``nprobe_max``) may be a *traced* scalar:
+    probes beyond it are masked, which is how the scan/pjit-compatible
+    masked engine path varies the probe width inside one program.
+
+    Returns ``(pos, d2)``: candidate rows as positions **in
+    cluster-sorted row space** [B, m] plus their proxy distances (slots
+    beyond the probed clusters' true rows carry +inf).  Callers map
+    positions to dataset ids via ``index.perm``.  When ``m`` equals the
+    probed capacity ``nprobe_max * max_cluster`` — the IVF-Flat
+    convention of re-ranking *everything probed*, and the engine's
+    default — no per-row screening decision remains, so the gather +
+    proxy-distance pass AND the top-m select (the two dominant costs of
+    the indexed path) are skipped entirely: the returned ``d2`` are
+    validity markers (0 for real rows, +inf for capacity padding, which
+    is all downstream consumers use them for), the rows come back in
+    CSR order, and the coarse stage costs O(C d + nprobe L) — the
+    proxy-dim factor moves wholly into the exact re-rank.
+    """
+    n = proxy_sorted.shape[0]
+    cd2 = centroid_scan(qp, centroids, centroid_norms, backend=backend)
+    probe = jax.lax.top_k(-cd2, nprobe_max)[1]              # [B, P]
+    starts = offsets[probe]                                 # [B, P]
+    ends = offsets[probe + 1]
+    lane = jnp.arange(max_cluster, dtype=starts.dtype)
+    pos = starts[..., None] + lane[None, None, :]           # [B, P, L]
+    valid = pos < ends[..., None]
+    if nprobe is not None:
+        probe_live = jnp.arange(nprobe_max) < nprobe        # [P]
+        valid = valid & probe_live[None, :, None]
+    b = qp.shape[0]
+    pos = jnp.minimum(pos, n - 1).reshape(b, -1)            # [B, R]
+    valid = valid.reshape(b, -1)
+    if m >= nprobe_max * max_cluster:
+        return pos, jnp.where(valid, 0.0, jnp.inf)
+    xs = proxy_sorted[pos]                                  # [B, R, dp]
+    xn = proxy_norms_sorted[pos]
+    d2 = support_sqdist(qp, xs, xn, backend=backend, **kw)
+    d2 = jnp.where(valid, d2, jnp.inf)
+    neg, sel = jax.lax.top_k(-d2, m)
+    return jnp.take_along_axis(pos, sel, axis=-1), -neg
 
 
 def golden_aggregate(q, x, sigma2: float, x_norms=None,
@@ -132,5 +221,6 @@ def flash_attention(q, k, v, causal: bool = True,
 
 __all__ = ["pdist", "support_sqdist", "support_distances", "golden_rerank",
            "golden_support_aggregate", "golden_aggregate",
+           "centroid_scan", "ivf_screen",
            "golden_attention_decode", "select_golden_blocks",
            "flash_attention", "DEFAULT_BACKEND", "BACKENDS"]
