@@ -20,7 +20,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import OptimalDenoiser, make_schedule, sampling_timesteps
+from repro.core import OptimalDenoiser, sampling_timesteps
 from repro.core.schedules import Schedule
 
 

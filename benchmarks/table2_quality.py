@@ -2,9 +2,7 @@
 every analytical denoiser, per dataset (cifar/celeba/afhq analogues)."""
 from __future__ import annotations
 
-import functools
 
-import jax
 
 from benchmarks.common import efficacy, make_oracle, peak_rss_gb
 from repro.core import (GoldDiff, GoldDiffConfig, OptimalDenoiser,

@@ -6,7 +6,6 @@ Conditional generation restricts the store to one class.
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 from benchmarks.common import efficacy, make_oracle

@@ -3,7 +3,7 @@ subset (the ablation behind Sec. 3.2)."""
 from __future__ import annotations
 
 from benchmarks.common import efficacy, make_oracle
-from repro.core import GoldDiff, GoldDiffConfig, PCADenoiser, make_schedule
+from repro.core import GoldDiff, PCADenoiser, make_schedule
 from repro.data import afhq_like, celeba_like
 
 

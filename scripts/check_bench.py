@@ -34,12 +34,38 @@ RECALL_MIN = 0.95
 
 
 def check_file(path: str, threshold: float) -> list[str]:
-    with open(path) as f:
-        record = json.load(f)
+    """Gate one BENCH_*.json record; returns human-readable failures.
+
+    Malformed input (unreadable file, invalid JSON, a non-object top
+    level, or non-numeric cells) is a *failure with a clear message*,
+    never an unhandled traceback — CI must report "your bench record is
+    broken", not crash.
+    """
+    try:
+        with open(path) as f:
+            record = json.load(f)
+    except OSError as e:
+        return [f"{path}: unreadable bench record ({e})"]
+    except json.JSONDecodeError as e:
+        return [f"{path}: malformed JSON ({e})"]
+    if not isinstance(record, dict):
+        return [f"{path}: expected a JSON object of name -> value cells, "
+                f"got {type(record).__name__}"]
+    if not record:
+        return [f"{path}: empty bench record (no cells to gate)"]
+    bad = sorted(name for name, value in record.items()
+                 if isinstance(value, bool)
+                 or not isinstance(value, (int, float)))
+    if bad:
+        return [f"{path}: non-numeric cell(s): {', '.join(bad[:5])}"
+                + (f" (+{len(bad) - 5} more)" if len(bad) > 5 else "")]
     failures = []
     for name, value in sorted(record.items()):
         if name.startswith("recall/"):
-            if value < RECALL_MIN:
+            if not 0.0 <= value <= 1.0:
+                failures.append(f"{path}: {name} = {value} outside [0, 1] "
+                                f"(not a recall fraction)")
+            elif value < RECALL_MIN:
                 failures.append(f"{path}: {name} = {value:.4f} < "
                                 f"{RECALL_MIN} (recall floor)")
             continue

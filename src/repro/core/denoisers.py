@@ -20,7 +20,6 @@ training points — this is the hook GoldDiff plugs into (Tab. 5
 """
 from __future__ import annotations
 
-import functools
 from typing import Literal
 
 import jax

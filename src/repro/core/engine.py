@@ -66,6 +66,37 @@ rows than the platform's gather/GEMM crossover (``index_mode="auto"``;
 ``"always"`` forces the index, e.g. for recall tests).  Program-cache
 keys extend with (nprobe_t, padded candidate count) so indexed and
 exact programs never collide.
+
+**Sharded execution** (``mesh=..., shard_axis=...``): the golden store
+— and, when indexed, the global index's cluster-sorted rows, split at
+CSR window boundaries (``repro.index.shard``) — is data-sharded across
+the devices of one mesh axis, and every public entry point
+(``denoise``, ``denoise_masked``, ``select``, ``full_scan``) runs the
+same coarse -> fine -> aggregate pipeline under ``jax.jit`` +
+``shard_map``:
+
+* shard-local coarse screening (exact ``ops.pdist`` over local rows, or
+  ``ops.ivf_screen_local`` over the shard's windows of the *globally
+  probed* index), with a cross-shard top-m threshold restricting the
+  union of candidates to exactly the single-host candidate set;
+* shard-local exact re-rank (``ops.support_distances``, the same
+  gather/dense strategy machinery as single-host);
+* a cross-shard **two-stage top-k**: local top-k (index, distance)
+  pairs are all-gathered — k floats+ints per shard, never data rows —
+  and the global k-th distance thresholds each shard's golden members
+  (``sharding.crossshard_kth``);
+* shard-local unnormalized softmax partials
+  (``ops.golden_partial_aggregate``) merged exactly with a log-sum-exp
+  ``psum`` (``sharding.lse_merge_mean``) into one
+  golden-support aggregate.
+
+Because the candidate partition equals the single-host candidate set
+row-for-row (both exact and indexed modes), sharded outputs match the
+single-host engine to fp32 reduction order — asserted on emulated
+8-device CPU meshes in ``tests/test_sharded_engine.py``.  Program-cache
+keys extend with the (shard_axis, n_shards) mesh shape.  The standalone
+``distributed_golden_denoise`` composes the same primitives, so there
+is one screening implementation in the repo.
 """
 from __future__ import annotations
 
@@ -76,10 +107,14 @@ import time
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import PartitionSpec
 
 from repro.core.dataset import DatasetStore, downsample_proxy
 from repro.core.schedules import Schedule
+from repro.distributed.sharding import (gather_global_topk, lse_merge_mean,
+                                        shard_map_compat)
 from repro.index.schedule import ProbeSchedule
+from repro.index.shard import shard_layout
 from repro.index.store import GoldenIndex
 from repro.kernels import ops, ref
 
@@ -161,7 +196,8 @@ class GoldDiffEngine:
                  cfg: GoldDiffConfig | None = None, backend: str = "xla",
                  storage_dtype=None, index: GoldenIndex | None = None,
                  probe_schedule: ProbeSchedule | None = None,
-                 strategy: str = "auto", index_mode: str = "auto"):
+                 strategy: str = "auto", index_mode: str = "auto",
+                 mesh=None, shard_axis: str = "data"):
         if backend not in ops.BACKENDS:
             raise ValueError(f"unknown backend {backend!r}; "
                              f"expected one of {ops.BACKENDS}")
@@ -169,6 +205,9 @@ class GoldDiffEngine:
             raise ValueError(f"unknown strategy {strategy!r}")
         if index_mode not in ("auto", "always"):
             raise ValueError(f"unknown index_mode {index_mode!r}")
+        if mesh is not None and shard_axis not in mesh.axis_names:
+            raise ValueError(f"shard_axis {shard_axis!r} not in mesh axes "
+                             f"{mesh.axis_names}")
         self.store = store
         self.schedule = schedule
         self.cfg = cfg or GoldDiffConfig()
@@ -219,6 +258,16 @@ class GoldDiffEngine:
             self._occ_cum = np.cumsum(np.sort(np.diff(
                 np.asarray(index.offsets))))
         self._nprobe: dict[int, int] = {}
+        # -- sharded execution (data-sharded store over one mesh axis)
+        self.mesh = mesh
+        self.shard_axis = shard_axis
+        if mesh is not None:
+            self.n_shards = int(mesh.shape[shard_axis])
+            self._layout = shard_layout(store, mesh, shard_axis, index=index,
+                                        storage_dtype=storage_dtype)
+        else:
+            self.n_shards = 1
+            self._layout = None
         # Per-timestep schedule constants, computed host-side exactly once.
         self._consts: dict[int, tuple[float, float]] = {}
         self._sizes: dict[int, tuple[int, int]] = {}
@@ -310,8 +359,10 @@ class GoldDiffEngine:
         return (self.nprobe(t), self.padded_m(t))
 
     def _key(self, kind: str, t, x_t: Array, extra: tuple = ()):
+        mesh_sig = () if self.mesh is None else \
+            (("mesh", self.shard_axis, self.n_shards),)
         return (kind, t, x_t.shape, str(x_t.dtype), self.backend,
-                self.strategy_for(t)) + tuple(extra)
+                self.strategy_for(t)) + mesh_sig + tuple(extra)
 
     # -- pipeline stages (traceable bodies) ----------------------------------
     def _proxy_query(self, q: Array) -> Array:
@@ -382,6 +433,180 @@ class GoldDiffEngine:
                                            strategy=self.strategy_for(t))
         return out.astype(x_t.dtype)
 
+    # -- sharded (mesh / shard_map) pipeline ---------------------------------
+    def _shard_mapped(self, local, n_extra_rep: int = 0):
+        """shard_map ``local`` over the layout's stacked per-shard arrays.
+
+        The returned callable takes ``(x_t, *extra_replicated)``; the
+        store (and index routing) arrays are threaded as explicit
+        shard_map operands with ``P(shard_axis)`` specs — the query and
+        the (small) centroid table are replicated.
+        """
+        L = self._layout
+        row = [L.X, L.x_norms, L.proxy, L.proxy_norms, L.ids]
+        rep = []
+        if L.indexed:
+            row += [L.offsets, L.wrange]
+            rep = [L.centroids, L.centroid_norms]
+        sp = PartitionSpec(self.shard_axis)
+        in_specs = (sp,) * len(row) + \
+            (PartitionSpec(),) * (1 + n_extra_rep + len(rep))
+        mapped = shard_map_compat(local, self.mesh, in_specs,
+                                  PartitionSpec())
+        return lambda x_t, *extra: mapped(*row, x_t, *extra, *rep)
+
+    def _unpack_local(self, args, n_extra: int = 0):
+        """Split a shard_map body's operands back into named pieces
+        (squeezing the leading size-1 shard dim off the sharded ones)."""
+        L = self._layout
+        args = list(args)
+        X, xn, pr, pn, ids = (z[0] for z in args[:5])
+        i = 5
+        offs = wr = cents = cnorms = None
+        if L.indexed:
+            offs, wr = args[5][0], args[6][0]
+            i = 7
+        x_t = args[i]
+        extra = tuple(args[i + 1: i + 1 + n_extra])
+        if L.indexed:
+            cents, cnorms = args[i + 1 + n_extra], args[i + 2 + n_extra]
+        return (X, xn, pr, pn, ids, offs, wr, cents, cnorms, x_t) + extra
+
+    def _sharded_static(self, kind: str, t: int):
+        """Build the shard_map'd program for a static timestep.
+
+        Shard-local coarse screen (exact or indexed) -> shard-local
+        exact re-rank -> cross-shard two-stage top-k -> LSE-merged
+        golden aggregate.  The surviving candidate partition equals the
+        single-host candidate set row-for-row, so the result matches
+        the single-host program to fp32 reduction order.
+        """
+        # deferred: retrieval module-imports repro.core.dataset, so a
+        # top-level import would cycle when repro.distributed is the
+        # first package imported
+        from repro.distributed.retrieval import (golden_local_topk,
+                                                 local_coarse_exact,
+                                                 merged_golden_mean)
+
+        L, ax = self._layout, self.shard_axis
+        a, sig2 = self.constants(t)
+        m_t, k_t = self.sizes(t)
+        m_cap = min(m_t, L.n_loc)
+        use_ix = self.use_index(t)
+        if use_ix:
+            p_t = self.nprobe(t)
+            w_cap = min(p_t, L.w_max)
+            k_cap = max(1, min(k_t, w_cap * L.max_cluster))
+            strategy = "gather"
+        else:
+            k_cap = max(1, min(k_t, m_cap))
+            strategy = self.strategy
+        backend = self.backend
+
+        def local(*args):
+            (X, xn, pr, pn, ids, offs, wr, cents, cnorms,
+             x_t) = self._unpack_local(args)
+            q = x_t / a
+            qp = self._proxy_query(q)
+            if use_ix:
+                cand, pd2 = ops.ivf_screen_local(
+                    qp, offs, cents, cnorms, wr[0], wr[1], p_t,
+                    L.max_cluster, w_cap, L.n_loc, backend=backend)
+                valid = jnp.isfinite(pd2)
+            else:
+                cand, valid = local_coarse_exact(qp, pr, pn, m_cap, m_t,
+                                                 m_t, ax, backend=backend)
+            idx, neg, kth = golden_local_topk(X, xn, q, cand, valid, k_cap,
+                                              k_t, k_t, ax, backend=backend,
+                                              strategy=strategy)
+            if kind == "select":
+                return gather_global_topk(ids[idx], neg, k_t, ax)
+            out = merged_golden_mean(X, idx, neg, kth, sig2, ax,
+                                     strategy=strategy)
+            return out.astype(x_t.dtype)
+
+        return self._shard_mapped(local)
+
+    def _sharded_masked_body(self, x_t: Array, t: Array) -> Array:
+        """Scan/pjit-compatible sharded step (one program, traced t).
+
+        Mirrors ``denoise_masked`` exactly — same (m_t, k_t) masks,
+        probe schedule, and occupancy floor — with the k_t cut applied
+        through the cross-shard threshold instead of a positional mask
+        (the same set, up to distance ties).
+        """
+        from repro.distributed.retrieval import (golden_local_topk,
+                                                 local_coarse_exact,
+                                                 merged_golden_mean)
+
+        L, ax = self._layout, self.shard_axis
+        n = self.store.n
+        m_min, m_max, k_min, k_max = self.cfg.sizes(n)
+        use_ix = self._use_index_masked()
+        m_cap = min(m_max, L.n_loc)
+        if use_ix:
+            p_pad = self._masked_nprobe_pad()
+            w_cap = min(p_pad, L.w_max)
+            k_cap = max(1, min(k_max, w_cap * L.max_cluster))
+            strategy = "gather"
+            num_c = self.index.num_clusters
+            need = int(np.searchsorted(self._occ_cum, k_max) + 1)
+        else:
+            k_cap = max(1, min(k_max, m_cap))
+            strategy = self.strategy
+        backend = self.backend
+
+        def local(*args):
+            (X, xn, pr, pn, ids, offs, wr, cents, cnorms, x_t,
+             tt) = self._unpack_local(args, n_extra=1)
+            g = self.schedule.g(tt)
+            m_t = jnp.floor(m_min + (m_max - m_min) * (1.0 - g)) \
+                .astype(jnp.int32)
+            k_t = jnp.floor(k_min + (k_max - k_min) * g).astype(jnp.int32)
+            a = jnp.asarray(self.schedule.a)[tt]
+            sig = jnp.asarray(self.schedule.b)[tt] / a
+            q = x_t / a
+            qp = self._proxy_query(q)
+            if use_ix:
+                nprobe_t = self.probe_schedule.nprobe_jnp(g, m_t, n, num_c)
+                nprobe_t = jnp.maximum(nprobe_t, min(need, num_c))
+                cand, pd2 = ops.ivf_screen_local(
+                    qp, offs, cents, cnorms, wr[0], wr[1], p_pad,
+                    L.max_cluster, w_cap, L.n_loc, nprobe=nprobe_t,
+                    backend=backend)
+                valid = jnp.isfinite(pd2)
+            else:
+                cand, valid = local_coarse_exact(qp, pr, pn, m_cap, m_max,
+                                                 m_t, ax, backend=backend)
+            idx, neg, kth = golden_local_topk(X, xn, q, cand, valid, k_cap,
+                                              k_max, k_t, ax,
+                                              backend=backend,
+                                              strategy=strategy)
+            out = merged_golden_mean(X, idx, neg, kth, sig * sig, ax,
+                                     strategy=strategy)
+            return out.astype(x_t.dtype)
+
+        return self._shard_mapped(local, n_extra_rep=1)(
+            x_t, jnp.asarray(t, jnp.int32))
+
+    def _sharded_full_scan(self, t: int):
+        """Exact posterior mean over the sharded store: dense local
+        logits, partial softmax states, one LSE merge."""
+        L, ax = self._layout, self.shard_axis
+        a, sig2 = self.constants(t)
+        backend = self.backend
+
+        def local(*args):
+            (X, xn, pr, pn, ids, offs, wr, cents, cnorms,
+             x_t) = self._unpack_local(args)
+            q = x_t / a
+            d2 = ops.pdist(q, X, x_norms=xn, backend=backend)
+            lg = jnp.maximum(-d2 / (2.0 * sig2), NEG_INF)
+            acc, m_l, l_l = ops.golden_partial_aggregate(X, None, lg)
+            return lse_merge_mean(acc, m_l, l_l, ax).astype(x_t.dtype)
+
+        return self._shard_mapped(local)
+
     # -- public entry points -------------------------------------------------
     def select(self, x_t: Array, t: int, jit: bool = True) -> Array:
         """Golden support S_t for each query; [B, k_t] (static shapes).
@@ -391,21 +616,27 @@ class GoldDiffEngine:
         """
         t = int(t)
         a, _ = self.constants(t)
+        if self.mesh is not None:
+            body = lambda: self._sharded_static("select", t)
+        else:
+            body = lambda: lambda x: self._select_ids_body(x / a, t)
         if not jit:
-            return self._select_ids_body(x_t / a, t)
+            return body()(x_t)
         fn = self.program(self._key("select", t, x_t, self._index_sig(t)),
-                          lambda: jax.jit(
-                              lambda x: self._select_ids_body(x / a, t)))
+                          lambda: jax.jit(body()))
         return fn(x_t)
 
     def denoise(self, x_t: Array, t: int, jit: bool = True) -> Array:
         """Full GoldDiff step for the Optimal base (unbiased SS on S_t)."""
         t = int(t)
+        if self.mesh is not None:
+            body = lambda: self._sharded_static("denoise", t)
+        else:
+            body = lambda: lambda x: self._denoise_body(x, t)
         if not jit:
-            return self._denoise_body(x_t, t)
+            return body()(x_t)
         fn = self.program(self._key("denoise", t, x_t, self._index_sig(t)),
-                          lambda: jax.jit(
-                              lambda x: self._denoise_body(x, t)))
+                          lambda: jax.jit(body()))
         return fn(x_t)
 
     # -- masked (scan/pjit-compatible) path -----------------------------------
@@ -444,6 +675,8 @@ class GoldDiffEngine:
         padded candidate count) and the selected ones are reused for the
         aggregation softmax.
         """
+        if self.mesh is not None:
+            return self._sharded_masked_body(x_t, t)
         n = self.store.n
         m_min, m_max, k_min, k_max = self.cfg.sizes(n)
         g = self.schedule.g(t)
@@ -498,9 +731,12 @@ class GoldDiffEngine:
         """Exact posterior mean over the whole store (Eq. 2) via ops."""
         t = int(t)
         a, sig2 = self.constants(t)
-        body = lambda x: ops.golden_aggregate(
-            x / a, self.X, sig2, x_norms=self.x_norms,
-            backend=self.backend).astype(x_t.dtype)
+        if self.mesh is not None:
+            body = self._sharded_full_scan(t)
+        else:
+            body = lambda x: ops.golden_aggregate(
+                x / a, self.X, sig2, x_norms=self.x_norms,
+                backend=self.backend).astype(x_t.dtype)
         if not jit:
             return body(x_t)
         fn = self.program(self._key("full_scan", t, x_t),

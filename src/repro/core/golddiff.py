@@ -94,13 +94,18 @@ class GoldDiff:
     fast path on CPU, ``pallas`` lowers the TPU kernels.  Pass
     ``index=repro.index.build_index(store)`` to route coarse screening
     through the clustered Golden Index (sublinear in N; probe width set
-    by ``probe_schedule``).
+    by ``probe_schedule``).  Pass ``mesh=``/``shard_axis=`` to
+    data-shard the golden store (and the index) across a mesh axis:
+    selection and aggregation then run under shard_map with a
+    cross-shard two-stage top-k + log-sum-exp merge (see
+    :class:`GoldDiffEngine`).
     """
 
     def __init__(self, base, cfg: GoldDiffConfig | None = None,
                  jit_steps: bool = True, backend: str | None = None,
                  storage_dtype=None, index=None, probe_schedule=None,
-                 strategy: str = "auto", index_mode: str = "auto"):
+                 strategy: str = "auto", index_mode: str = "auto",
+                 mesh=None, shard_axis: str = "data"):
         self.base = base
         self.cfg = cfg or GoldDiffConfig()
         self.store: DatasetStore = base.store
@@ -118,7 +123,8 @@ class GoldDiff:
                                      index=index,
                                      probe_schedule=probe_schedule,
                                      strategy=strategy,
-                                     index_mode=index_mode)
+                                     index_mode=index_mode,
+                                     mesh=mesh, shard_axis=shard_axis)
 
     @property
     def backend(self) -> str:
@@ -145,6 +151,10 @@ class GoldDiff:
         # them OUTSIDE the traced program
         if hasattr(self.base, "_dataset_features"):
             self.base._dataset_features(self.base.patch_size(t))
+        if self.engine.mesh is not None:
+            # sharded selection is its own shard_map program; the base's
+            # feature-space logits then run on the replicated support
+            return self.base(x_t, t, support=self.select(x_t, t))
         a, _ = self.engine.constants(t)
         fn = self.engine.program(
             self.engine._key(("wrap", self.base.name), t, x_t,

@@ -3,46 +3,45 @@
 The GoldDiff selection + aggregation pipeline, shard-parallel (DESIGN §3):
 
   1. every shard screens its local dataset rows with the proxy distance
-     and re-ranks its local candidates exactly (embarrassingly parallel);
-  2. local top-k (index, distance) pairs are all-gathered — k floats+ints
-     per shard, NOT data rows;
-  3. the golden set = global top-k over the gathered candidates;
-  4. each shard aggregates its *owned* golden members with the unbiased
-     streaming softmax and partial states merge exactly with a
-     log-sum-exp ``psum`` (streaming.merge semantics), so the distributed
-     estimate is bit-comparable to the single-host one.
+     (exact matmul-form ``ops.pdist``, or ``ops.ivf_screen_local`` over
+     its slice of a globally partitioned Golden Index) and a cross-shard
+     top-m threshold restricts the union to exactly the global
+     candidate set;
+  2. each shard re-ranks its candidates exactly and local top-k
+     (index, distance) pairs are all-gathered — k floats+ints per
+     shard, NOT data rows;
+  3. the golden set = global top-k over the gathered candidates
+     (``sharding.crossshard_kth``);
+  4. each shard aggregates its *owned* golden members into an
+     unnormalized softmax partial state (``ops.golden_partial_aggregate``)
+     and partial states merge exactly with a log-sum-exp ``psum``
+     (``sharding.lse_merge_mean``, streaming.merge semantics), so the
+     distributed estimate is bit-comparable to the single-host one.
 
-This is the same two-stage top-k + LSE-merge pattern the decode-attention
-path uses for sharded KV caches (models/layers.py) — the paper's
-mechanism implemented once, reused twice.
+Since PR 3 the shard-local screening math AND the cross-shard merge are
+the same primitives the sharded ``GoldDiffEngine`` executes
+(``core/engine.py``) — this module composes them for callers that want
+raw (sigma2, m, k) control without a schedule; there is exactly one
+implementation of the two-stage top-k + LSE merge in the repo
+(``distributed/sharding.py``), pinned against a global top-k + softmax
+in ``tests/test_sharded_engine.py``.
 
-The shard-local distance math (proxy screening and exact re-rank) goes
-through the kernel ops layer (``repro.kernels.ops``, ``backend="xla"``:
-shard_map bodies compile for whatever mesh platform is active, where
-Pallas TPU kernels may not lower), so the matmul-form distances here are
-the exact same code the single-host GoldDiffEngine runs.
-
-**Shard-local Golden Index** (``build_shard_indexes`` +
-``distributed_golden_denoise(..., index=...)``): each shard clusters its
-*own* rows with k-means and step 1 becomes an IVF probe
-(``ops.ivf_screen``) over only the probed clusters' local rows — the
-coarse stage is sublinear per shard, O(C d + nprobe L d) instead of
-O(N/S d), while steps 2-4 (local exact re-rank, two-stage top-k,
-LSE-merged aggregation) are unchanged, so the merged estimate stays
-bit-comparable to the single-host indexed engine.
+The shard-local distance math goes through the kernel ops layer
+(``repro.kernels.ops``, ``backend="xla"``: shard_map bodies compile for
+whatever mesh platform is active, where Pallas TPU kernels may not
+lower), so the matmul-form distances here are the exact same code the
+single-host GoldDiffEngine runs.
 """
 from __future__ import annotations
 
-import functools
-import math
-from typing import NamedTuple
-
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.dataset import DatasetStore, downsample_proxy
+from repro.distributed.sharding import (crossshard_kth, lse_merge_mean,
+                                        shard_map_compat)
+from repro.index.shard import ShardedLayout, shard_layout
 from repro.index.store import build_index
 from repro.kernels import ops
 
@@ -74,161 +73,128 @@ def shard_store(store: DatasetStore, mesh: Mesh, axis: str = "data"
     )
 
 
-class ShardedIndex(NamedTuple):
-    """One GoldenIndex per dataset shard, stacked on a leading shard axis
-    (every per-shard array is placed sharded over the mesh ``axis``, so
-    inside ``shard_map`` each shard sees exactly its own index).
-    ``perm`` maps cluster-sorted *local* positions to local row ids."""
-
-    centroids: Array           # [S, C, dp]
-    centroid_norms: Array      # [S, C]
-    perm: Array                # [S, n_loc] int32 (local row ids)
-    offsets: Array             # [S, C + 1] int32
-    proxy_sorted: Array        # [S, n_loc, dp]
-    proxy_norms_sorted: Array  # [S, n_loc]
-    max_cluster: int           # global max cluster size (static pad width)
-
-    @property
-    def num_clusters(self) -> int:
-        return self.centroids.shape[1]
-
-
 def build_shard_indexes(store: DatasetStore, mesh: Mesh, axis: str = "data",
                         num_clusters: int | None = None,
                         key: Array | None = None, iters: int = 25
-                        ) -> ShardedIndex:
-    """Cluster each shard's rows independently (host-side, at setup).
+                        ) -> ShardedLayout:
+    """One *global* Golden Index, partitioned across the mesh axis.
 
-    Takes the same *unsharded* store as ``shard_store`` and mirrors its
-    padding, so the stacked per-shard arrays line up row-for-row with
-    the sharded dataset.  Padded rows keep +inf proxy norms and are
-    never screened in.
+    Builds ``repro.index.build_index`` over the full proxy embedding and
+    lays it out per shard at CSR window boundaries
+    (``repro.index.shard.shard_layout``) — the same layout the sharded
+    ``GoldDiffEngine`` uses, so shard-local probing reproduces the
+    single-host probe set exactly instead of approximating it with
+    per-shard clusterings.
     """
-    n_sh = mesh.shape[axis]
-    n = store.n
-    n_loc = -(-n // n_sh)
-    pad = n_loc * n_sh - n
-    proxy = jnp.pad(store.proxy, ((0, pad), (0, 0)))
-    pnorms = jnp.pad(store.proxy_norms, (0, pad), constant_values=jnp.inf)
-    c = num_clusters or max(4, int(round(math.sqrt(n_loc))))
-    key = jax.random.PRNGKey(0) if key is None else key
-    parts = []
-    for s in range(n_sh):
-        rows = slice(s * n_loc, (s + 1) * n_loc)
-        sub = DatasetStore(X=proxy[rows], proxy=proxy[rows],
-                           x_norms=pnorms[rows], proxy_norms=pnorms[rows],
-                           image_shape=store.image_shape)
-        parts.append(build_index(sub, num_clusters=c,
-                                 key=jax.random.fold_in(key, s),
-                                 iters=iters))
-    # balance chunking can yield different window counts per shard; pad
-    # every shard to the widest with empty never-probed windows (+inf
-    # centroid norms, zero-row CSR spans)
-    w = max(p.num_clusters for p in parts)
+    index = build_index(store, num_clusters=num_clusters, key=key,
+                        iters=iters)
+    return shard_layout(store, mesh, axis, index=index)
 
-    def pad_part(p):
-        extra = w - p.num_clusters
-        return dict(
-            centroids=jnp.pad(p.centroids, ((0, extra), (0, 0))),
-            centroid_norms=jnp.pad(p.centroid_norms, (0, extra),
-                                   constant_values=jnp.inf),
-            offsets=jnp.pad(p.offsets, (0, extra), mode="edge"),
-            perm=p.perm, proxy_sorted=p.proxy_sorted,
-            proxy_norms_sorted=p.proxy_norms_sorted)
 
-    padded = [pad_part(p) for p in parts]
-    sh = NamedSharding(mesh, P(axis))
-    stack = lambda f: jax.device_put(
-        jnp.stack([p[f] for p in padded]), sh)
-    return ShardedIndex(
-        centroids=stack("centroids"),
-        centroid_norms=stack("centroid_norms"),
-        perm=stack("perm"),
-        offsets=stack("offsets"),
-        proxy_sorted=stack("proxy_sorted"),
-        proxy_norms_sorted=stack("proxy_norms_sorted"),
-        max_cluster=max(p.max_cluster for p in parts),
-    )
+# -- shard-local pipeline stages (shard_map bodies; engine-callable) ---------
+
+def local_coarse_exact(qp, proxy_loc, pnorms_loc, m_cap: int, m_sort: int,
+                       m, axis: str, backend: str = "xla"):
+    """Shard-local exact proxy screening + cross-shard top-m threshold.
+
+    Local top-``m_cap`` by matmul-form proxy distance, then a global
+    m-th-distance cut so the surviving candidates across all shards are
+    exactly the single-host top-m set (not the union of per-shard
+    top-m/S approximations).  ``m`` may be traced (masked path);
+    ``m_sort`` is its static bound.  Returns ``(cand, valid)``:
+    [B, m_cap] local row ids + validity.
+    """
+    d2p = ops.pdist(qp, proxy_loc, x_norms=pnorms_loc, backend=backend)
+    negp, cand = jax.lax.top_k(-d2p, m_cap)
+    mth = crossshard_kth(negp, m_sort, m, axis)
+    return cand, negp >= mth[:, None]
+
+
+def golden_local_topk(X_loc, xn_loc, q, cand, cand_valid, k_cap: int,
+                      k_sort: int, k, axis: str, backend: str = "xla",
+                      strategy: str = "gather"):
+    """Exact shard-local re-rank + stage-two global top-k threshold.
+
+    Returns ``(idx, neg, kth)``: local top-``k_cap`` candidate row ids,
+    their negated exact distances, and the global k-th threshold —
+    ``neg >= kth[:, None]`` marks this shard's golden members.
+    """
+    d2 = ops.support_distances(q, X_loc, cand, x_norms=xn_loc,
+                               backend=backend, strategy=strategy)
+    d2 = jnp.where(cand_valid, d2, jnp.inf)
+    neg, pos = jax.lax.top_k(-d2, k_cap)
+    idx = jnp.take_along_axis(cand, pos, axis=-1)
+    kth = crossshard_kth(neg, k_sort, k, axis)
+    return idx, neg, kth
+
+
+def merged_golden_mean(X_loc, idx, neg, kth, sig2, axis: str,
+                       strategy: str = "gather") -> Array:
+    """Aggregate owned golden members and LSE-merge across shards."""
+    lg = jnp.where(neg >= kth[:, None],
+                   jnp.maximum(neg / (2.0 * sig2), NEG_INF), NEG_INF)
+    acc, m_l, l_l = ops.golden_partial_aggregate(X_loc, idx, lg,
+                                                 strategy=strategy)
+    return lse_merge_mean(acc, m_l, l_l, axis)
 
 
 def distributed_golden_denoise(store: DatasetStore, mesh: Mesh, q: Array,
                                sigma2: float, m: int, k: int,
                                proxy_factor: int = 4, axis: str = "data",
-                               index: ShardedIndex | None = None,
+                               index: ShardedLayout | None = None,
                                nprobe: int | None = None) -> Array:
     """Full GoldDiff step, shard-parallel.  q: [B, D] (rescaled query).
 
-    With ``index`` (from ``build_shard_indexes``), each shard's coarse
-    screen probes ``nprobe`` of its local clusters instead of scanning
-    every local row (defaults to a quarter of the clusters; pick
-    per-timestep values with ``repro.index.ProbeSchedule``).
+    ``store`` must be placed with :func:`shard_store`.  With ``index``
+    (from :func:`build_shard_indexes`), the coarse screen probes
+    ``nprobe`` windows of the *global* index (defaults to a quarter of
+    them) and every probed row feeds the exact re-rank (IVF-Flat
+    capacity mode); the store rows then come from the layout's
+    cluster-sorted copies, not from ``store``.
     """
-    n_sh = mesh.shape[axis]
-    m_loc = max(1, -(-m // n_sh))
-    k_loc = max(1, -(-k // n_sh))
+    n_sh = int(mesh.shape[axis])
     if index is not None:
-        nprobe = nprobe or max(1, -(-index.num_clusters // 4))
-        nprobe = min(nprobe, index.num_clusters)
-        m_loc = min(m_loc, nprobe * index.max_cluster)
+        c = index.centroids.shape[0]
+        nprobe = min(nprobe or max(1, -(-c // 4)), c)
+        w_cap = min(nprobe, index.w_max)
+        cap = w_cap * index.max_cluster
+        k_cap = max(1, min(k, cap))
 
-    def local(x_sh, xn_sh, proxy_sh, pn_sh, q_rep, *ix):
-        # 1. local coarse screening via the ops layer — exact matmul-form
-        #    pdist, or the shard-local IVF probe when an index is given
-        #    (+inf norms on padded rows exclude them from every top-k)
+        def local(X, xn, offs, wr, ids, q_rep, cents, cnorms):
+            X, xn, offs, wr = (z[0] for z in (X, xn, offs, wr))
+            del ids
+            q_img = q_rep.reshape(q_rep.shape[:-1]
+                                  + tuple(store.image_shape))
+            qp = downsample_proxy(q_img, proxy_factor)
+            cand, pd2 = ops.ivf_screen_local(
+                qp, offs, cents, cnorms, wr[0], wr[1], nprobe,
+                index.max_cluster, w_cap, index.n_loc, backend="xla")
+            idx, neg, kth = golden_local_topk(X, xn, q_rep, cand,
+                                              jnp.isfinite(pd2), k_cap,
+                                              k, k, axis)
+            return merged_golden_mean(X, idx, neg, kth, sigma2, axis)
+
+        sp = P(axis)
+        mapped = shard_map_compat(
+            local, mesh,
+            in_specs=(sp, sp, sp, sp, sp, P(), P(), P()), out_specs=P())
+        return mapped(index.X, index.x_norms, index.offsets, index.wrange,
+                      index.ids, q, index.centroids, index.centroid_norms)
+
+    n_loc = store.X.shape[0] // n_sh
+    m_cap = min(m, n_loc)
+    k_cap = max(1, min(k, m_cap))
+
+    def local(x_sh, xn_sh, proxy_sh, pn_sh, q_rep):
         q_img = q_rep.reshape(q_rep.shape[:-1] + tuple(store.image_shape))
         qp = downsample_proxy(q_img, proxy_factor)
-        if ix:
-            cents, cnorms, perm, offsets, psort, pnsort = (
-                a.squeeze(0) for a in ix)
-            mm = min(m_loc, x_sh.shape[0])
-            pos, pd2 = ops.ivf_screen(qp, psort, pnsort, offsets, cents,
-                                      cnorms, mm, nprobe,
-                                      index.max_cluster, backend="xla")
-            cand = perm[pos]                               # local row ids
-            screen_valid = jnp.isfinite(pd2)
-        else:
-            d2p = ops.pdist(qp, proxy_sh, x_norms=pn_sh, backend="xla")
-            _, cand = jax.lax.top_k(-d2p, min(m_loc, x_sh.shape[0]))
-            screen_valid = True
-        # 2. local exact re-rank inside candidates (matmul form over the
-        #    gathered rows — no [B, m_loc, D] subtract temporaries)
-        xc = x_sh[cand]                                    # [B, m_loc, D]
-        d2 = ops.support_sqdist(q_rep, xc, xn_sh[cand], backend="xla")
-        d2 = jnp.where(screen_valid, d2, jnp.inf)
-        kk = min(k_loc, d2.shape[-1])
-        neg, pos = jax.lax.top_k(-d2, kk)
-        # 3. global top-k over gathered local winners
-        gathered = jax.lax.all_gather(-neg, axis, axis=1)   # [B, n_sh, kk]
-        flat = gathered.reshape(q_rep.shape[0], -1)
-        kth = -jax.lax.top_k(-flat, min(k, flat.shape[-1]))[0][:, -1]
-        # 4. aggregate locally owned golden members (d2 <= global kth)
-        sel = -neg                                          # local dists [B,kk]
-        keep = sel <= kth[:, None]
-        lg = jnp.where(keep, -sel / (2.0 * sigma2), NEG_INF)
-        m_l = jnp.max(lg, -1)
-        p = jnp.exp(lg - m_l[:, None])
-        l_l = jnp.sum(p, -1)
-        xsel = jnp.take_along_axis(xc, pos[..., None], axis=1)
-        acc_l = jnp.einsum("bk,bkd->bd", p, xsel)
-        # exact LSE merge across shards
-        m_g = jax.lax.pmax(m_l, axis)
-        sc = jnp.exp(m_l - m_g)
-        l_g = jax.lax.psum(l_l * sc, axis)
-        acc_g = jax.lax.psum(acc_l * sc[:, None], axis)
-        return acc_g / jnp.maximum(l_g, 1e-30)[:, None]
+        cand, valid = local_coarse_exact(qp, proxy_sh, pn_sh, m_cap, m, m,
+                                         axis)
+        idx, neg, kth = golden_local_topk(x_sh, xn_sh, q_rep, cand, valid,
+                                          k_cap, k, k, axis)
+        return merged_golden_mean(x_sh, idx, neg, kth, sigma2, axis)
 
-    spec_row = P(axis)
-    ix_args = () if index is None else (
-        index.centroids, index.centroid_norms, index.perm, index.offsets,
-        index.proxy_sorted, index.proxy_norms_sorted)
-    kw = dict(mesh=mesh,
-              in_specs=(spec_row, spec_row, spec_row, spec_row, P())
-              + (spec_row,) * len(ix_args),
-              out_specs=P())
-    if hasattr(jax, "shard_map"):                  # jax >= 0.6
-        mapped = jax.shard_map(local, check_vma=False, **kw)
-    else:                                          # jax 0.4.x
-        from jax.experimental.shard_map import shard_map
-        mapped = shard_map(local, check_rep=False, **kw)
-    return mapped(store.X, store.x_norms, store.proxy, store.proxy_norms, q,
-                  *ix_args)
+    sp = P(axis)
+    mapped = shard_map_compat(local, mesh, in_specs=(sp, sp, sp, sp, P()),
+                              out_specs=P())
+    return mapped(store.X, store.x_norms, store.proxy, store.proxy_norms, q)

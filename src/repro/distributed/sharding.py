@@ -1,4 +1,4 @@
-"""Logical-axis sharding (MaxText-style) for the model zoo.
+"""Logical-axis sharding (MaxText-style) plus cross-shard merge primitives.
 
 Every parameter / activation carries *logical* axis names; a ``Rules``
 table maps logical names to mesh axes per execution mode.  A thread-local
@@ -9,6 +9,16 @@ Mesh axes: ``("data", "model")`` single pod, ``("pod", "data", "model")``
 multi-pod (launch/mesh.py).  GSPMD pads non-divisible dimensions (e.g. 40
 query heads over model=16); the padding waste shows up in the roofline's
 MODEL_FLOPS / HLO_FLOPs ratio, where we track it.
+
+The bottom half of this module holds the **cross-shard merge
+primitives** used inside ``shard_map`` bodies by both the sharded
+``GoldDiffEngine`` (core/engine.py) and the standalone distributed
+retrieval path (distributed/retrieval.py) — the two-stage top-k
+threshold, the exact log-sum-exp softmax-state merge, and the gathered
+global top-k.  They are the *only* implementation of the cross-shard
+screening math in the repo; keeping them here (engine-callable, free of
+engine state) is what lets ``tests/test_sharded_engine.py`` pin
+"two-stage merge == global top-k + softmax" once for every consumer.
 """
 from __future__ import annotations
 
@@ -18,6 +28,7 @@ import threading
 from typing import Any
 
 import jax
+import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 _CTX = threading.local()
@@ -166,3 +177,68 @@ def mesh_axis_size(*names: str) -> int:
         if name in r.mesh.axis_names:
             n *= r.mesh.shape[name]
     return n
+
+
+# -- cross-shard merge primitives (shard_map bodies only) --------------------
+
+def shard_map_compat(f, mesh: Mesh, in_specs, out_specs):
+    """``jax.shard_map`` (jax >= 0.6) or the experimental fallback,
+    with replication checking off (outputs are psum/pmax-replicated)."""
+    kw = dict(mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, check_vma=False, **kw)
+    from jax.experimental.shard_map import shard_map
+    return shard_map(f, check_rep=False, **kw)
+
+
+def crossshard_kth(neg_local: jnp.ndarray, k_sort: int, k,
+                   axis: str) -> jnp.ndarray:
+    """Value of the k-th *largest* entry across all shards; [B].
+
+    Stage two of the two-stage top-k: every shard contributes its local
+    top candidates ``neg_local`` [B, k_loc] (use negated distances so
+    "largest" means "closest"; invalid slots -inf/NEG_INF sort last),
+    the [B, S * k_loc] gather is k_loc floats per shard — never data
+    rows — and the returned threshold selects exactly the global top-k
+    (``neg >= kth``), matching a single-host ``top_k`` up to ties.
+
+    ``k_sort`` is the static sort width (an upper bound on k); ``k``
+    itself may be a traced scalar, which is how the masked (scan/pjit)
+    engine path varies k_t inside one program.
+    """
+    g = jax.lax.all_gather(neg_local, axis, axis=1)
+    flat = g.reshape(g.shape[0], -1)
+    k_sort = min(k_sort, flat.shape[-1])
+    vals = jax.lax.top_k(flat, k_sort)[0]
+    kidx = jnp.clip(jnp.asarray(k, jnp.int32) - 1, 0, k_sort - 1)
+    kidx = jnp.broadcast_to(jnp.reshape(kidx, (1, 1)), (vals.shape[0], 1))
+    return jnp.take_along_axis(vals, kidx, axis=-1)[:, 0]
+
+
+def gather_global_topk(ids_local: jnp.ndarray, neg_local: jnp.ndarray,
+                       k: int, axis: str) -> jnp.ndarray:
+    """Global top-k ids across shards: gather (id, score) pairs — k ints
+    + k floats per shard — and re-select; [B, k] (static k)."""
+    g_neg = jax.lax.all_gather(neg_local, axis, axis=1)
+    g_ids = jax.lax.all_gather(ids_local, axis, axis=1)
+    b = neg_local.shape[0]
+    pos = jax.lax.top_k(g_neg.reshape(b, -1), k)[1]
+    return jnp.take_along_axis(g_ids.reshape(b, -1), pos, axis=-1)
+
+
+def lse_merge_mean(acc: jnp.ndarray, m: jnp.ndarray, l: jnp.ndarray,
+                   axis: str) -> jnp.ndarray:
+    """Exact log-sum-exp merge of per-shard softmax partial states.
+
+    ``(acc [B, D], m [B], l [B])`` are the unnormalized weighted sum,
+    running max-logit, and running partition sum of each shard's golden
+    members (``streaming.merge`` semantics).  Shards with no members
+    carry the *finite* ``NEG_INF`` sentinel max, so their scale factor
+    underflows to exactly 0 and the merged estimate is bit-comparable
+    to the single-host softmax up to fp32 reduction order.
+    """
+    m_g = jax.lax.pmax(m, axis)
+    sc = jnp.exp(m - m_g)
+    l_g = jax.lax.psum(l * sc, axis)
+    acc_g = jax.lax.psum(acc * sc[:, None], axis)
+    return acc_g / jnp.maximum(l_g, 1e-30)[:, None]

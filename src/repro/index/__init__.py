@@ -34,14 +34,18 @@ scan plus CSR window enumeration — every probed row feeds the exact
 re-rank directly, so no per-row proxy pass survives in the coarse
 stage.  ``GoldDiffEngine(index=...)`` routes the coarse stage through
 this package on all three backends (xla / pallas_interpret / pallas);
-``repro.distributed.retrieval`` builds one index per dataset shard so
-sharded screening is sublinear per shard too.
+:mod:`repro.index.shard` partitions one global index across the devices
+of a mesh axis at CSR window boundaries, which is how
+``GoldDiffEngine(mesh=...)`` keeps sharded indexed screening equal to
+the single-host probe set (not merely close to it).
 """
 from repro.index.build import kmeans, kmeans_plusplus
 from repro.index.schedule import ProbeSchedule
+from repro.index.shard import ShardedLayout, partition_windows, shard_layout
 from repro.index.store import (GoldenIndex, build_index, load_index,
                                save_index, screening_recall)
 
 __all__ = ["GoldenIndex", "build_index", "save_index", "load_index",
            "kmeans", "kmeans_plusplus", "ProbeSchedule",
+           "ShardedLayout", "partition_windows", "shard_layout",
            "screening_recall"]

@@ -13,14 +13,14 @@ it can shape static programs; everything else is a device array.
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import TYPE_CHECKING, NamedTuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.dataset import DatasetStore
-from repro.index.build import kmeans
+if TYPE_CHECKING:  # annotation-only: repro.index must not pull in
+    from repro.core.dataset import DatasetStore  # repro.core (cycle)
 
 Array = jnp.ndarray
 
@@ -65,6 +65,11 @@ def build_index(store: DatasetStore, num_clusters: int | None = None,
     split cluster tie on centroid distance, so wide clusters simply
     consume several adjacent probe slots.
     """
+    # deferred: build <-> store <-> engine would otherwise cycle at
+    # module import time (engine imports the sharded-layout machinery,
+    # which imports this module)
+    from repro.index.build import kmeans
+
     n = store.n
     c = int(np.clip(num_clusters or default_num_clusters(n), 1, n))
     key = jax.random.PRNGKey(0) if key is None else key

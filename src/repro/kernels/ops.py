@@ -131,6 +131,84 @@ def golden_support_aggregate(x, idx, logits, backend: str = DEFAULT_BACKEND,
     return _sagg(x[idx], logits, interpret=(backend != "pallas"), **kw)
 
 
+def golden_partial_aggregate(x, idx, logits, strategy: str | None = None):
+    """Unnormalized softmax partial state of x[idx] per query.
+
+    Returns ``(acc [B, D], m [B], l [B])`` — the shard-local half of the
+    golden aggregation: partial states from different dataset shards
+    combine exactly with ``repro.distributed.sharding.lse_merge_mean``
+    (streaming.merge semantics), which is how the sharded
+    ``GoldDiffEngine`` and ``distributed_golden_denoise`` produce a
+    posterior mean bit-comparable to the single-host softmax.
+
+    ``idx`` indexes rows of the *local* shard ``x``; ``strategy``
+    mirrors :func:`golden_support_aggregate` ("dense": scatter + GEMM,
+    the XLA:CPU shape; "gather": row gather + einsum, sublinear in the
+    shard size).  Pass ``idx=None`` with dense [B, n_loc] logits for
+    the full-scan (every-local-row) case.  The body is plain jnp on
+    every backend: it runs inside ``shard_map``, where it compiles for
+    whatever platform the mesh lives on (the same rationale as the
+    standalone distributed path).
+    """
+    if idx is None:
+        lg = logits.astype(jnp.float32)
+        m = jnp.max(lg, axis=-1)
+        p = jnp.exp(lg - m[:, None])
+        return (jax.lax.dot_general(
+            p, x.astype(jnp.float32), (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32), m, jnp.sum(p, axis=-1))
+    if (strategy or "gather") == "dense":
+        return ref.scatter_partial_aggregate_ref(x, idx, logits)
+    return ref.partial_aggregate_ref(x[idx], logits)
+
+
+def ivf_screen_local(qp, offsets_loc, centroids, centroid_norms, w_lo, w_hi,
+                     nprobe_max: int, max_cluster: int, w_cap: int,
+                     n_loc: int, nprobe=None,
+                     backend: str = DEFAULT_BACKEND):
+    """Shard-local lanes of a *globally probed* Golden Index.
+
+    The sharded engine partitions one global ``GoldenIndex`` across
+    devices at CSR *window* boundaries (``repro.index.shard``): each
+    shard owns the contiguous window ids ``[w_lo, w_hi)`` and their
+    cluster-sorted rows.  Every shard runs the identical (replicated,
+    O(C d)) centroid scan and top-``nprobe_max`` probe selection — same
+    input, same op, so the probe list agrees across shards bit-for-bit
+    — then keeps only *its own* probed windows, compacted best-first
+    into ``w_cap = min(nprobe_max, windows per shard)`` slots via a
+    masked top-k.  The union of lanes across shards is exactly the
+    single-host probe set, each lane owned by one shard: this is what
+    makes sharded-vs-single-host indexed screening an equality test,
+    not a recall bound.
+
+    Capacity mode only (the engine's IVF-Flat convention: every probed
+    row feeds the exact re-rank).  Returns ``(pos, d2)``: [B, w_cap *
+    max_cluster] positions into the shard's sorted rows, and validity
+    markers (0 real, +inf capacity padding / foreign windows).
+    ``nprobe`` (defaults to ``nprobe_max``) may be traced — probes
+    beyond it are masked, for the scan/pjit-compatible masked path.
+    """
+    cd2 = centroid_scan(qp, centroids, centroid_norms, backend=backend)
+    cneg, probe = jax.lax.top_k(-cd2, nprobe_max)          # [B, P], global
+    mine = (probe >= w_lo) & (probe < w_hi)
+    if nprobe is not None:
+        mine = mine & (jnp.arange(nprobe_max) < nprobe)[None, :]
+    score = jnp.where(mine, cneg, -jnp.inf)
+    svals, spos = jax.lax.top_k(score, w_cap)              # my probed windows
+    win = jnp.take_along_axis(probe, spos, axis=-1)
+    wvalid = svals > -jnp.inf
+    lw = jnp.clip(win - w_lo, 0, offsets_loc.shape[0] - 2)
+    starts = offsets_loc[lw]                               # [B, Wc]
+    ends = offsets_loc[lw + 1]
+    lane = jnp.arange(max_cluster, dtype=starts.dtype)
+    pos = starts[..., None] + lane[None, None, :]          # [B, Wc, L]
+    valid = (pos < ends[..., None]) & wvalid[..., None]
+    b = qp.shape[0]
+    pos = jnp.minimum(pos, n_loc - 1).reshape(b, -1)
+    valid = valid.reshape(b, -1)
+    return pos, jnp.where(valid, 0.0, jnp.inf)
+
+
 def centroid_scan(q, centroids, c_norms=None, backend: str = DEFAULT_BACKEND,
                   **kw):
     """Query -> k-means-centroid distances [B, C] (IVF level 1, fp32)."""
@@ -220,7 +298,8 @@ def flash_attention(q, k, v, causal: bool = True,
 
 
 __all__ = ["pdist", "support_sqdist", "support_distances", "golden_rerank",
-           "golden_support_aggregate", "golden_aggregate",
-           "centroid_scan", "ivf_screen",
-           "golden_attention_decode", "select_golden_blocks",
-           "flash_attention", "DEFAULT_BACKEND", "BACKENDS"]
+           "golden_support_aggregate", "golden_partial_aggregate",
+           "golden_aggregate", "centroid_scan", "ivf_screen",
+           "ivf_screen_local", "golden_attention_decode",
+           "select_golden_blocks", "flash_attention", "DEFAULT_BACKEND",
+           "BACKENDS"]

@@ -67,6 +67,43 @@ def golden_support_aggregate_ref(xs: jnp.ndarray,
     return jnp.einsum("bk,bkd->bd", w, xs.astype(jnp.float32))
 
 
+def partial_aggregate_ref(xs: jnp.ndarray, logits: jnp.ndarray
+                          ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Unnormalized softmax partial state over gathered rows.
+
+    Returns ``(acc [B, D], m [B], l [B])``: the exp-weighted sum, the
+    max logit, and the partition sum — ``streaming.merge`` semantics, so
+    shard-partial states combine exactly with a log-sum-exp merge
+    (``sharding.lse_merge_mean``).  All-masked rows (every logit at the
+    finite NEG_INF sentinel) yield a NEG_INF max whose merge scale
+    underflows to 0, not NaN.
+    """
+    lg = logits.astype(jnp.float32)
+    m = jnp.max(lg, axis=-1)
+    p = jnp.exp(lg - m[:, None])
+    l = jnp.sum(p, axis=-1)
+    acc = jnp.einsum("bk,bkd->bd", p, xs.astype(jnp.float32))
+    return acc, m, l
+
+
+def scatter_partial_aggregate_ref(x: jnp.ndarray, idx: jnp.ndarray,
+                                  logits: jnp.ndarray
+                                  ) -> tuple[jnp.ndarray, jnp.ndarray,
+                                             jnp.ndarray]:
+    """Dense scatter + GEMM form of :func:`partial_aggregate_ref` (the
+    XLA:CPU-fast shape: no [B, k, D] row gathers)."""
+    b, n = logits.shape[0], x.shape[0]
+    lg = logits.astype(jnp.float32)
+    m = jnp.max(lg, axis=-1)
+    p = jnp.exp(lg - m[:, None])
+    l = jnp.sum(p, axis=-1)
+    ws = jnp.zeros((b, n), jnp.float32).at[
+        jnp.arange(b)[:, None], idx].add(p)
+    acc = jax.lax.dot_general(ws, x, (((1,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    return acc, m, l
+
+
 def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
                         causal: bool = True) -> jnp.ndarray:
     """q: [B,Hkv,G,S,dh]; k/v: [B,Hkv,S,dh] — dense softmax attention."""

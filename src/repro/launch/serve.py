@@ -17,12 +17,9 @@ import time
 from typing import Iterable
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.golddiff import PRESETS
-from repro.core import (GoldDiff, GoldDiffConfig, OptimalDenoiser,
-                        PCADenoiser, make_schedule, sample)
+from repro.core import GoldDiff, GoldDiffConfig, make_schedule, sample
 from repro.core.denoisers import make_denoiser
 from repro.data import make_dataset
 

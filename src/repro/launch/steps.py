@@ -1,7 +1,6 @@
 """Step-function builders shared by train.py / serve.py / dryrun.py."""
 from __future__ import annotations
 
-import functools
 from typing import Callable
 
 import jax

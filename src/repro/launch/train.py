@@ -11,7 +11,6 @@ token pipeline -> sharded train_step (pjit) -> AdamW -> checkpointing.
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import time
 
 import jax

@@ -10,8 +10,6 @@ posterior (DESIGN §4).
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -12,7 +12,6 @@ Execution modes:
 """
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax

@@ -1,0 +1,83 @@
+"""scripts/check_bench.py: the tier-2 perf gate must fail loudly (and
+cleanly) on malformed records, and keep gating good ones."""
+import importlib.util
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+spec = importlib.util.spec_from_file_location(
+    "check_bench", REPO / "scripts" / "check_bench.py")
+check_bench = importlib.util.module_from_spec(spec)
+spec.loader.exec_module(check_bench)
+
+
+def _write(tmp_path, name, payload) -> str:
+    p = tmp_path / name
+    p.write_text(payload if isinstance(payload, str)
+                 else json.dumps(payload))
+    return str(p)
+
+
+def test_good_record_passes(tmp_path):
+    p = _write(tmp_path, "BENCH_x.json",
+               {"a/seed_eager/t1": 100.0, "a/engine_xla/t1": 10.0,
+                "recall/a/t1": 0.99})
+    assert check_bench.check_file(p, 1.0) == []
+
+
+def test_regression_and_recall_floor_fail(tmp_path):
+    p = _write(tmp_path, "BENCH_x.json",
+               {"a/seed_eager/t1": 10.0, "a/engine_xla/t1": 100.0,
+                "recall/a/t1": 0.5})
+    fails = check_bench.check_file(p, 1.0)
+    assert len(fails) == 2
+    assert any("speedup" in f for f in fails)
+    assert any("recall floor" in f for f in fails)
+
+
+def test_malformed_json_is_clean_failure(tmp_path):
+    p = _write(tmp_path, "BENCH_bad.json", "{not json!")
+    fails = check_bench.check_file(p, 1.0)
+    assert len(fails) == 1 and "malformed JSON" in fails[0]
+
+
+def test_missing_file_is_clean_failure(tmp_path):
+    fails = check_bench.check_file(str(tmp_path / "BENCH_gone.json"), 1.0)
+    assert len(fails) == 1 and "unreadable" in fails[0]
+
+
+def test_wrong_toplevel_and_empty_and_nonnumeric(tmp_path):
+    assert "expected a JSON object" in check_bench.check_file(
+        _write(tmp_path, "BENCH_l.json", [1, 2]), 1.0)[0]
+    assert "empty bench record" in check_bench.check_file(
+        _write(tmp_path, "BENCH_e.json", {}), 1.0)[0]
+    fails = check_bench.check_file(
+        _write(tmp_path, "BENCH_n.json",
+               {"a/seed_eager/t1": "fast", "b": True}), 1.0)
+    assert "non-numeric cell" in fails[0]
+    assert "a/seed_eager/t1" in fails[0] and "b" in fails[0]
+
+
+def test_recall_out_of_range(tmp_path):
+    fails = check_bench.check_file(
+        _write(tmp_path, "BENCH_r.json", {"recall/a/t1": 1.7}), 1.0)
+    assert len(fails) == 1 and "outside [0, 1]" in fails[0]
+
+
+def test_cli_exit_codes(tmp_path):
+    """End-to-end: exit 1 + message on a broken record, exit 0 on good."""
+    _write(tmp_path, "BENCH_bad.json", "{oops")
+    r = subprocess.run(
+        [sys.executable, str(REPO / "scripts" / "check_bench.py"),
+         "--dir", str(tmp_path)], capture_output=True, text=True)
+    assert r.returncode == 1
+    assert "malformed JSON" in r.stdout and "Traceback" not in r.stderr
+    (tmp_path / "BENCH_bad.json").unlink()
+    _write(tmp_path, "BENCH_ok.json", {"x/seed_eager/t": 5.0,
+                                       "x/engine_xla/t": 1.0})
+    r = subprocess.run(
+        [sys.executable, str(REPO / "scripts" / "check_bench.py"),
+         "--dir", str(tmp_path)], capture_output=True, text=True)
+    assert r.returncode == 0, r.stdout + r.stderr

@@ -1,10 +1,8 @@
 """GoldDiff selection/schedule invariants + convergence to the full scan."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 try:
     from hypothesis import given, settings, strategies as st
 except ImportError:                      # container lacks hypothesis

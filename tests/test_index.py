@@ -352,6 +352,8 @@ print("PASS" if ok else "FAIL")
     env = dict(os.environ)
     env["PYTHONPATH"] = "src"
     env["JAX_PLATFORMS"] = "cpu"
+    from pathlib import Path
+    repo = str(Path(__file__).resolve().parent.parent)
     r = subprocess.run([sys.executable, "-c", code], capture_output=True,
-                       text=True, timeout=420, cwd="/root/repo", env=env)
+                       text=True, timeout=420, cwd=repo, env=env)
     assert "PASS" in r.stdout, r.stdout + r.stderr

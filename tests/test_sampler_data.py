@@ -3,10 +3,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (GoldDiff, GoldDiffConfig, OptimalDenoiser,
+from repro.core import (GoldDiff, OptimalDenoiser,
                         make_schedule, sample, sample_scan,
                         denoise_trajectory, sampling_timesteps)
-from repro.core.dataset import downsample_proxy, make_store
+from repro.core.dataset import downsample_proxy
 from repro.data import (TokenPipeline, TokenPipelineConfig, cifar_like,
                         fast_batch, gmm, moons)
 

@@ -5,11 +5,10 @@ import sys
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core import (GoldDiff, GoldDiffConfig, OptimalDenoiser,
                         make_schedule, sample)
-from repro.data import cifar_like, gmm
+from repro.data import gmm
 
 
 def test_end_to_end_generation_quality():
@@ -124,12 +123,14 @@ for t in (100, 500):
 print("PASS" if ok else "FAIL")
 """
     import os
+    from pathlib import Path
     env = dict(os.environ)
     env["PYTHONPATH"] = "src"
     # pin the child to CPU: with libtpu installed but no TPU attached,
     # platform autodetection hangs inside TPU client init.  The 8 fake
     # devices come from XLA_FLAGS, which works on the CPU platform.
     env["JAX_PLATFORMS"] = "cpu"
+    repo = str(Path(__file__).resolve().parent.parent)
     r = subprocess.run([sys.executable, "-c", code], capture_output=True,
-                       text=True, timeout=420, cwd="/root/repo", env=env)
+                       text=True, timeout=420, cwd=repo, env=env)
     assert "PASS" in r.stdout, r.stdout + r.stderr
