@@ -22,6 +22,7 @@ import json
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from benchmarks.common import time_call
 from repro.core import (GoldDiff, GoldDiffConfig, OptimalDenoiser,
@@ -167,6 +168,23 @@ def run(fast: bool = True):
                  "N": n, "time_per_step_s": t_eng,
                  "speedup": full_scan_speedup})
 
+    # bf16 storage (ROADMAP item): dataset + proxy operands in bfloat16
+    # (norms/accumulation stay fp32) on the same static steps, recording
+    # BOTH speed and quality vs the fp32 engine — on XLA:CPU bf16 GEMMs
+    # are software-emulated so this tracks bandwidth-vs-compute, while
+    # on real TPUs it is the halved-HBM-traffic configuration.
+    gd_bf16 = GoldDiff(OptimalDenoiser(store, sch), cfg, backend="xla",
+                       storage_dtype=jnp.bfloat16)
+    for t in (800, 400, 100):
+        t_bf16 = time_call(lambda xx, _t=t: gd_bf16(xx, _t), x)
+        out32 = np.asarray(gd(x, t), np.float32)
+        out16 = np.asarray(gd_bf16(x, t), np.float32)
+        relerr = float(np.abs(out16 - out32).max()
+                       / (np.abs(out32).max() + 1e-9))
+        rows.append({"kind": "static", "method": "engine_xla_bf16", "t": t,
+                     "N": n, "time_per_step_s": t_bf16,
+                     "bf16_relerr_vs_fp32": relerr})
+
     # pallas_interpret: correctness-path timing on a tiny shape (the
     # kernel body runs in Python — this row tracks that it stays usable
     # for validation, not that it is fast)
@@ -195,6 +213,9 @@ def write_bench_json(rows, path: str = BENCH_JSON) -> None:
         # overwrite each other in the cross-PR record
         name = f"{r['kind']}/{r['method']}/N{r['N']}/t{r['t']}"
         record[name] = round(r["time_per_step_s"] * 1e6, 1)
+        if "bf16_relerr_vs_fp32" in r:
+            record[f"{name}/bf16_relerr_vs_fp32"] = \
+                round(r["bf16_relerr_vs_fp32"], 6)
     with open(path, "w") as f:
         json.dump(record, f, indent=2, sort_keys=True)
 

@@ -14,9 +14,10 @@ import time
 import traceback
 
 from benchmarks import (engine_speedup, fig3_sensitivity, fig6_hparams,
-                        index_speedup, roofline, sharded_speedup,
-                        table1_complexity, table2_quality, table3_scale,
-                        table4_edm, table5_orthogonality, table6_bias)
+                        index_speedup, roofline, screen_speedup,
+                        sharded_speedup, table1_complexity, table2_quality,
+                        table3_scale, table4_edm, table5_orthogonality,
+                        table6_bias)
 
 TABLES = {
     "table1_complexity": table1_complexity,
@@ -30,6 +31,7 @@ TABLES = {
     "roofline": roofline,
     "engine_speedup": engine_speedup,
     "index_speedup": index_speedup,
+    "screen_speedup": screen_speedup,
     "sharded_speedup": sharded_speedup,
 }
 

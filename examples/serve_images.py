@@ -11,7 +11,7 @@ import time
 
 import numpy as np
 
-from repro.launch.serve import GoldDiffEngine, Request
+from repro.launch.serve import Request, ServeEngine
 
 
 def main():
@@ -19,8 +19,8 @@ def main():
     reqs = [Request(i, num_images=4, seed=100 + i) for i in range(4)]
 
     print(f"== GoldDiff engine (N={n}) ==")
-    eng = GoldDiffEngine("cifar_like", {"n": n}, base="optimal",
-                         num_steps=10, max_batch=batch)
+    eng = ServeEngine("cifar_like", {"n": n}, base="optimal",
+                      num_steps=10, max_batch=batch)
     t0 = time.time()
     res = eng.serve(list(reqs))
     t_gold = time.time() - t0
@@ -32,7 +32,7 @@ def main():
 
     print(f"== full-scan baseline engine (same requests) ==")
 
-    class FullScanEngine(GoldDiffEngine):
+    class FullScanEngine(ServeEngine):
         def __init__(self, *a, **kw):
             super().__init__(*a, **kw)
             self.denoiser = self.denoiser.base       # unwrap GoldDiff

@@ -29,8 +29,14 @@ PAIRS = {
     "seed_eager": "engine_xla",
     "exact_coarse": "indexed_coarse",
     "exact_step": "indexed_step",
+    # peak-temp-memory pair (bytes): the streamed screen must never
+    # allocate MORE than the materialized [B, N] form it replaces
+    "materialized_mem": "streamed_mem",
 }
 RECALL_MIN = 0.95
+# parity/ cells are exactness fractions (e.g. streamed-vs-materialized
+# top-m candidate sets), much tighter than recall: identical up to ties
+PARITY_MIN = 0.999
 
 
 def check_file(path: str, threshold: float) -> list[str]:
@@ -69,6 +75,14 @@ def check_file(path: str, threshold: float) -> list[str]:
                 failures.append(f"{path}: {name} = {value:.4f} < "
                                 f"{RECALL_MIN} (recall floor)")
             continue
+        if name.startswith("parity/"):
+            if not 0.0 <= value <= 1.0:
+                failures.append(f"{path}: {name} = {value} outside [0, 1] "
+                                f"(not a parity fraction)")
+            elif value < PARITY_MIN:
+                failures.append(f"{path}: {name} = {value:.4f} < "
+                                f"{PARITY_MIN} (exact-parity floor)")
+            continue
         parts = name.split("/")
         for i, seg in enumerate(parts):
             subj = PAIRS.get(seg)
@@ -78,14 +92,18 @@ def check_file(path: str, threshold: float) -> list[str]:
             if subj_name not in record:
                 continue
             subj_us = record[subj_name]
+            # *_mem pairs hold bytes, not microseconds: report their
+            # ratio as a memory reduction, not a speedup
+            label = ("mem reduction" if subj.endswith("_mem")
+                     else "speedup")
             if subj_us <= 0:
                 failures.append(f"{path}: {subj_name} has non-positive "
-                                f"timing {subj_us}")
+                                f"value {subj_us}")
                 continue
             speedup = value / subj_us
             if speedup < threshold:
                 failures.append(
-                    f"{path}: {subj_name} speedup {speedup:.2f}x vs "
+                    f"{path}: {subj_name} {label} {speedup:.2f}x vs "
                     f"{name} < {threshold:.2f}x")
     return failures
 

@@ -51,6 +51,20 @@ but the gather form wins below the platform's crossover fraction
 ``strategy="measure"`` to probe the live device instead of using the
 table).  On TPU the tiled VMEM kernels always gather.
 
+**Streamed exact screening** (``screen=``): the exact coarse stage and
+the full scan route through ``ops.screen_topm`` / the streaming LSE
+(``kernels/screen.py``) — a fused tiled pdist with a running top-m
+(or online-softmax) carry that reads the store exactly once at
+O(B * (m + tile)) peak memory instead of materializing [B, N].
+``screen="auto"`` keeps the materialized form while the [B, N] buffer
+fits the platform budget (``SCREEN_MATERIALIZE_BYTES``; on CPU the one
+big GEMM + top_k is ~2x faster when it fits) and streams beyond it,
+which makes screening and full-scan baselines runnable at N where the
+dense matrix cannot be allocated at all.  ``screen_tile`` is part of
+every streamed program's cache key.  The same policy applies per shard
+inside the sharded entry points (the local [B, n_loc] screen streams
+by the same rule).
+
 **Golden Index** (``index=...``): coarse screening routes through the
 IVF-clustered ``repro.index.GoldenIndex`` — a tiled centroid scan plus
 a gather of only the probed clusters' rows (``ops.ivf_screen``) — with
@@ -127,6 +141,19 @@ NEG_INF = -1e30
 # to be refined on real hardware — pass strategy="measure" to probe).
 GATHER_CROSSOVER_FRAC = {"cpu": 0.10, "gpu": 0.35, "tpu": 0.50}
 
+# Streamed-vs-materialized screening crossover: the one-pass tiled
+# screen (``ops.screen_topm`` / the streaming full-scan LSE) caps peak
+# live memory at O(B * (m + tile)), but its running-merge scan
+# serializes work that the materialized form hands XLA as one big GEMM
+# + top_k — measured ~2x slower on XLA:CPU where everything fits
+# (benchmarks/screen_speedup.py), ~13x less temp memory at N=65536.
+# ``screen="auto"`` therefore streams only once the [B, N] fp32 buffer
+# would cross this per-platform budget (i.e. exactly when the dense
+# path stops being allocatable/cheap); "streamed"/"materialized" force
+# either form.  GPU/TPU budgets are conservative HBM-headroom guesses
+# to refine on real hardware.
+SCREEN_MATERIALIZE_BYTES = {"cpu": 1 << 31, "gpu": 1 << 30, "tpu": 1 << 28}
+
 
 def measure_crossover(x: Array, x_norms: Array, batch: int = 8,
                       rows: int = 2048, repeats: int = 3) -> float:
@@ -197,12 +224,15 @@ class GoldDiffEngine:
                  storage_dtype=None, index: GoldenIndex | None = None,
                  probe_schedule: ProbeSchedule | None = None,
                  strategy: str = "auto", index_mode: str = "auto",
-                 mesh=None, shard_axis: str = "data"):
+                 mesh=None, shard_axis: str = "data",
+                 screen: str = "auto", screen_tile: int = ops.DEFAULT_TILE):
         if backend not in ops.BACKENDS:
             raise ValueError(f"unknown backend {backend!r}; "
                              f"expected one of {ops.BACKENDS}")
         if strategy not in ("auto", "measure", "gather", "dense"):
             raise ValueError(f"unknown strategy {strategy!r}")
+        if screen not in ("auto", "streamed", "materialized"):
+            raise ValueError(f"unknown screen mode {screen!r}")
         if index_mode not in ("auto", "always"):
             raise ValueError(f"unknown index_mode {index_mode!r}")
         if mesh is not None and shard_axis not in mesh.axis_names:
@@ -223,9 +253,13 @@ class GoldDiffEngine:
         # Norms always fp32, from the master copy (exact even under bf16).
         self.x_norms = store.x_norms.astype(jnp.float32)
         self.proxy_norms = store.proxy_norms.astype(jnp.float32)
+        # -- streamed-vs-materialized exact screening (build-time policy)
+        self.screen = screen
+        self.screen_tile = int(screen_tile)
         # -- per-platform gather-vs-dense strategy (build-time selection)
         n = store.n
         platform = jax.default_backend()
+        self._screen_budget = SCREEN_MATERIALIZE_BYTES.get(platform, 1 << 31)
         if strategy == "measure":
             self.crossover_frac = measure_crossover(self.X, self.x_norms)
         else:
@@ -342,6 +376,21 @@ class GoldDiffEngine:
         """
         return "gather" if self.use_index(t) else self.strategy
 
+    def use_stream(self, batch: int, n: int | None = None) -> bool:
+        """Stream the exact screen / full scan at this (batch, store) size?
+
+        ``auto`` streams exactly when the materialized [B, N] fp32
+        distance/logits buffer would cross the platform's budget
+        (``SCREEN_MATERIALIZE_BYTES``) — the streamed form is then the
+        only one that allocates, at O(B * (m + tile)) live memory.  ``n``
+        overrides the store size (the sharded bodies pass their local
+        row count).
+        """
+        if self.screen != "auto":
+            return self.screen == "streamed"
+        n = self.store.n if n is None else n
+        return 4 * int(batch) * int(n) > self._screen_budget
+
     # -- program cache -------------------------------------------------------
     def program(self, key, build):
         """Compiled-program cache keyed on (kind, t, shape, dtype,
@@ -361,8 +410,15 @@ class GoldDiffEngine:
     def _key(self, kind: str, t, x_t: Array, extra: tuple = ()):
         mesh_sig = () if self.mesh is None else \
             (("mesh", self.shard_axis, self.n_shards),)
+        # streamed screening programs tile the store, so the tile size
+        # is part of the compiled program's identity; sharded programs
+        # stream by their LOCAL row count (what the shard bodies see)
+        n_sig = None if self.mesh is None else self._layout.n_loc
+        screen_sig = (("screen", "streamed", self.screen_tile)
+                      if self.use_stream(x_t.shape[0], n_sig)
+                      else ("screen", "materialized"),)
         return (kind, t, x_t.shape, str(x_t.dtype), self.backend,
-                self.strategy_for(t)) + mesh_sig + tuple(extra)
+                self.strategy_for(t)) + mesh_sig + screen_sig + tuple(extra)
 
     # -- pipeline stages (traceable bodies) ----------------------------------
     def _proxy_query(self, q: Array) -> Array:
@@ -373,10 +429,17 @@ class GoldDiffEngine:
         return qp
 
     def coarse(self, q: Array, m: int) -> Array:
-        """Top-m candidates by exact proxy distance (ops.pdist); [B, m]."""
-        d2 = ops.pdist(self._proxy_query(q), self.proxy,
-                       x_norms=self.proxy_norms, backend=self.backend)
-        return jax.lax.top_k(-d2, m)[1]
+        """Top-m candidates by exact proxy distance; [B, m].
+
+        Routed through ``ops.screen_topm``: one pass over the proxy
+        store either way, materializing the [B, N] distance matrix only
+        below the streamed-vs-materialized crossover (``use_stream``).
+        """
+        return ops.screen_topm(self._proxy_query(q), self.proxy, m,
+                               x_norms=self.proxy_norms,
+                               tile=self.screen_tile,
+                               stream=self.use_stream(q.shape[0]),
+                               backend=self.backend)[0]
 
     def coarse_indexed(self, q: Array, m: int, nprobe_max: int,
                        nprobe=None) -> tuple[Array, Array]:
@@ -514,8 +577,10 @@ class GoldDiffEngine:
                     L.max_cluster, w_cap, L.n_loc, backend=backend)
                 valid = jnp.isfinite(pd2)
             else:
-                cand, valid = local_coarse_exact(qp, pr, pn, m_cap, m_t,
-                                                 m_t, ax, backend=backend)
+                cand, valid = local_coarse_exact(
+                    qp, pr, pn, m_cap, m_t, m_t, ax, backend=backend,
+                    stream=self.use_stream(x_t.shape[0], L.n_loc),
+                    tile=self.screen_tile)
             idx, neg, kth = golden_local_topk(X, xn, q, cand, valid, k_cap,
                                               k_t, k_t, ax, backend=backend,
                                               strategy=strategy)
@@ -576,8 +641,10 @@ class GoldDiffEngine:
                     backend=backend)
                 valid = jnp.isfinite(pd2)
             else:
-                cand, valid = local_coarse_exact(qp, pr, pn, m_cap, m_max,
-                                                 m_t, ax, backend=backend)
+                cand, valid = local_coarse_exact(
+                    qp, pr, pn, m_cap, m_max, m_t, ax, backend=backend,
+                    stream=self.use_stream(x_t.shape[0], L.n_loc),
+                    tile=self.screen_tile)
             idx, neg, kth = golden_local_topk(X, xn, q, cand, valid, k_cap,
                                               k_max, k_t, ax,
                                               backend=backend,
@@ -590,19 +657,19 @@ class GoldDiffEngine:
             x_t, jnp.asarray(t, jnp.int32))
 
     def _sharded_full_scan(self, t: int):
-        """Exact posterior mean over the sharded store: dense local
-        logits, partial softmax states, one LSE merge."""
+        """Exact posterior mean over the sharded store: local partial
+        softmax states (dense or tile-streamed), one LSE merge."""
         L, ax = self._layout, self.shard_axis
         a, sig2 = self.constants(t)
-        backend = self.backend
 
         def local(*args):
             (X, xn, pr, pn, ids, offs, wr, cents, cnorms,
              x_t) = self._unpack_local(args)
             q = x_t / a
-            d2 = ops.pdist(q, X, x_norms=xn, backend=backend)
-            lg = jnp.maximum(-d2 / (2.0 * sig2), NEG_INF)
-            acc, m_l, l_l = ops.golden_partial_aggregate(X, None, lg)
+            acc, m_l, l_l = ops.golden_full_partial(
+                q, X, sig2, x_norms=xn,
+                stream=self.use_stream(x_t.shape[0], L.n_loc),
+                tile=self.screen_tile)
             return lse_merge_mean(acc, m_l, l_l, ax).astype(x_t.dtype)
 
         return self._shard_mapped(local)
@@ -736,7 +803,8 @@ class GoldDiffEngine:
         else:
             body = lambda x: ops.golden_aggregate(
                 x / a, self.X, sig2, x_norms=self.x_norms,
-                backend=self.backend).astype(x_t.dtype)
+                backend=self.backend, stream=self.use_stream(x.shape[0]),
+                tile=self.screen_tile).astype(x_t.dtype)
         if not jit:
             return body(x_t)
         fn = self.program(self._key("full_scan", t, x_t),

@@ -98,14 +98,17 @@ class GoldDiff:
     data-shard the golden store (and the index) across a mesh axis:
     selection and aggregation then run under shard_map with a
     cross-shard two-stage top-k + log-sum-exp merge (see
-    :class:`GoldDiffEngine`).
+    :class:`GoldDiffEngine`).  ``screen=``/``screen_tile=`` control the
+    streamed-vs-materialized exact screening crossover (one-pass tiled
+    top-m at O(B (m + tile)) memory vs the dense [B, N] matrix).
     """
 
     def __init__(self, base, cfg: GoldDiffConfig | None = None,
                  jit_steps: bool = True, backend: str | None = None,
                  storage_dtype=None, index=None, probe_schedule=None,
                  strategy: str = "auto", index_mode: str = "auto",
-                 mesh=None, shard_axis: str = "data"):
+                 mesh=None, shard_axis: str = "data",
+                 screen: str = "auto", screen_tile: int | None = None):
         self.base = base
         self.cfg = cfg or GoldDiffConfig()
         self.store: DatasetStore = base.store
@@ -117,6 +120,8 @@ class GoldDiff:
         self.jit_steps = jit_steps
         if backend is None:
             backend = getattr(base, "backend", "xla")
+        engine_kw = {} if screen_tile is None else \
+            {"screen_tile": screen_tile}
         self.engine = GoldDiffEngine(self.store, self.schedule, self.cfg,
                                      backend=backend,
                                      storage_dtype=storage_dtype,
@@ -124,7 +129,8 @@ class GoldDiff:
                                      probe_schedule=probe_schedule,
                                      strategy=strategy,
                                      index_mode=index_mode,
-                                     mesh=mesh, shard_axis=shard_axis)
+                                     mesh=mesh, shard_axis=shard_axis,
+                                     screen=screen, **engine_kw)
 
     @property
     def backend(self) -> str:

@@ -94,7 +94,8 @@ def build_shard_indexes(store: DatasetStore, mesh: Mesh, axis: str = "data",
 # -- shard-local pipeline stages (shard_map bodies; engine-callable) ---------
 
 def local_coarse_exact(qp, proxy_loc, pnorms_loc, m_cap: int, m_sort: int,
-                       m, axis: str, backend: str = "xla"):
+                       m, axis: str, backend: str = "xla",
+                       stream: bool = False, tile: int = ops.DEFAULT_TILE):
     """Shard-local exact proxy screening + cross-shard top-m threshold.
 
     Local top-``m_cap`` by matmul-form proxy distance, then a global
@@ -103,9 +104,15 @@ def local_coarse_exact(qp, proxy_loc, pnorms_loc, m_cap: int, m_sort: int,
     top-m/S approximations).  ``m`` may be traced (masked path);
     ``m_sort`` is its static bound.  Returns ``(cand, valid)``:
     [B, m_cap] local row ids + validity.
+
+    The local screen goes through ``ops.screen_topm``: ``stream=True``
+    tiles the shard's rows with a running top-m carry (O(B * (m_cap +
+    tile)) live memory, the engine's streamed mode applied per shard)
+    instead of materializing the [B, n_loc] distance matrix.
     """
-    d2p = ops.pdist(qp, proxy_loc, x_norms=pnorms_loc, backend=backend)
-    negp, cand = jax.lax.top_k(-d2p, m_cap)
+    cand, d2p = ops.screen_topm(qp, proxy_loc, m_cap, x_norms=pnorms_loc,
+                                tile=tile, stream=stream, backend=backend)
+    negp = -d2p
     mth = crossshard_kth(negp, m_sort, m, axis)
     return cand, negp >= mth[:, None]
 

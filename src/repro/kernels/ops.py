@@ -1,9 +1,11 @@
 """Jit'd public wrappers over the Pallas kernels with backend dispatch.
 
 This module is the single entry point the core library uses for the
-GoldDiff hot path — coarse screening (``pdist``), exact re-ranking
-(``golden_rerank``), and golden aggregation (``golden_support_aggregate``
-for supports, ``golden_aggregate`` for full scans) — plus the attention
+GoldDiff hot path — coarse screening (``screen_topm``: fused tiled
+pdist + running top-m, or the materialized ``pdist`` form below the
+crossover), exact re-ranking (``golden_rerank``), and golden
+aggregation (``golden_support_aggregate`` for supports,
+``golden_aggregate`` for full scans, streamable) — plus the attention
 kernels.  ``repro.core.engine.GoldDiffEngine`` routes every stage
 through these wrappers so the same code path serves CPU tests, the
 multi-pod dry-run, and real TPUs.
@@ -51,6 +53,9 @@ from repro.kernels.golden_rerank import support_sqdist as _sqd
 from repro.kernels.golden_support_aggregate import (
     golden_support_aggregate as _sagg)
 from repro.kernels.pdist import pdist as _pdist
+from repro.kernels.screen import (DEFAULT_TILE, full_scan_partial_stream,
+                                  full_scan_stream, screen_topm_pallas,
+                                  screen_topm_scan)
 
 DEFAULT_BACKEND = "pallas_interpret"
 BACKENDS = ("pallas", "pallas_interpret", "xla")
@@ -63,6 +68,36 @@ def pdist(q, x, q_norms=None, x_norms=None, backend: str = DEFAULT_BACKEND,
         return ref.pdist_ref(q, x, q_norms, x_norms)
     return _pdist(q, x, q_norms, x_norms, interpret=(backend != "pallas"),
                   **kw)
+
+
+def screen_topm(q, x, m: int, q_norms=None, x_norms=None,
+                tile: int = DEFAULT_TILE, stream: bool = True,
+                backend: str = DEFAULT_BACKEND, **kw):
+    """Exact top-m rows of x by squared distance, read exactly once.
+
+    The streaming coarse screen (``kernels.screen``): tiled matmul-form
+    distances + a running top-m carry, peak memory O(B * (m + tile))
+    instead of the materialized O(B * N).  Returns ``(idx, d2)``
+    [B, m] with ``d2`` ascending; ``m > N`` surplus slots carry
+    ``d2 = +inf`` and clamped in-range indices.  The result equals
+    ``lax.top_k(-pdist(q, x), m)`` including tie order.
+
+    ``stream=False`` keeps the materialized form — the full [B, N]
+    distance matrix (tiled ``pdist`` kernel on pallas backends) plus
+    one wide ``lax.top_k`` — which is the right shape below the
+    engine's streamed-vs-materialized crossover, where one big GEMM
+    beats the scan's per-tile merge overhead (measured ~2x on XLA:CPU;
+    see ``benchmarks/screen_speedup.py``).
+    """
+    if not stream:
+        if backend == "xla":
+            return ref.screen_topm_ref(q, x, m, q_norms, x_norms)
+        return ref.materialized_topm(
+            pdist(q, x, q_norms, x_norms, backend=backend), m)
+    if backend == "xla":
+        return screen_topm_scan(q, x, m, q_norms, x_norms, tile=tile)
+    return screen_topm_pallas(q, x, m, q_norms, x_norms, bn=tile,
+                              interpret=(backend != "pallas"), **kw)
 
 
 def support_sqdist(q, xs, x_norms, backend: str = DEFAULT_BACKEND, **kw):
@@ -272,12 +307,44 @@ def ivf_screen(qp, proxy_sorted, proxy_norms_sorted, offsets, centroids,
 
 
 def golden_aggregate(q, x, sigma2: float, x_norms=None,
-                     backend: str = DEFAULT_BACKEND, **kw):
-    """Full-scan posterior mean (Eq. 2) via streaming softmax."""
+                     backend: str = DEFAULT_BACKEND, stream: bool = False,
+                     tile: int = DEFAULT_TILE, **kw):
+    """Full-scan posterior mean (Eq. 2) via streaming softmax.
+
+    The pallas backends always stream (online-softmax carry in VMEM
+    scratch).  On xla, ``stream=True`` switches from the dense [B, N]
+    logits form to the tiled ``lax.scan`` LSE
+    (``kernels.screen.full_scan_stream``), which makes full-scan
+    baselines runnable at N where the dense matrix cannot be allocated.
+    """
     if backend == "xla":
+        if stream:
+            return full_scan_stream(q, x, float(sigma2), x_norms=x_norms,
+                                    tile=tile)
         return ref.golden_aggregate_ref(q, x, sigma2, x_norms)
     return _agg(q, x, float(sigma2), x_norms=x_norms,
                 interpret=(backend != "pallas"), **kw)
+
+
+def golden_full_partial(q, x, sigma2: float, x_norms=None,
+                        stream: bool = False, tile: int = DEFAULT_TILE):
+    """Unnormalized softmax state of the FULL local store; (acc, m, l).
+
+    The shard-local half of a full scan: states LSE-merge exactly
+    across shards (``sharding.lse_merge_mean``).  ``stream=True`` tiles
+    the pass (O(B * tile) live logits) instead of materializing the
+    dense [B, n_loc] matrix; both forms clamp logits at the finite
+    ``NEG_INF`` sentinel so all-padding rows merge to zero weight, and
+    they agree to fp32 reduction order.  Plain jnp on every backend —
+    it runs inside ``shard_map``, where it compiles for whatever
+    platform the mesh lives on.
+    """
+    if stream:
+        return full_scan_partial_stream(q, x, float(sigma2),
+                                        x_norms=x_norms, tile=tile)
+    d2 = ref.pdist_ref(q, x, x_norms=x_norms)
+    lg = jnp.maximum(-d2 / (2.0 * float(sigma2)), -1e30)
+    return golden_partial_aggregate(x, None, lg)
 
 
 def golden_attention_decode(q, k, v, block_idx, valid, block_size: int = 128,
@@ -297,9 +364,10 @@ def flash_attention(q, k, v, causal: bool = True,
                   **kw)
 
 
-__all__ = ["pdist", "support_sqdist", "support_distances", "golden_rerank",
-           "golden_support_aggregate", "golden_partial_aggregate",
+__all__ = ["pdist", "screen_topm", "support_sqdist", "support_distances",
+           "golden_rerank", "golden_support_aggregate",
+           "golden_partial_aggregate", "golden_full_partial",
            "golden_aggregate", "centroid_scan", "ivf_screen",
            "ivf_screen_local", "golden_attention_decode",
            "select_golden_blocks", "flash_attention", "DEFAULT_BACKEND",
-           "BACKENDS"]
+           "BACKENDS", "DEFAULT_TILE"]

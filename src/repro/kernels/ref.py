@@ -20,6 +20,36 @@ def pdist_ref(q: jnp.ndarray, x: jnp.ndarray,
     return jnp.maximum(d2, 0.0)
 
 
+def materialized_topm(d2: jnp.ndarray, m: int
+                      ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Top-m of a materialized [B, N] distance matrix with the shared
+    slot semantics: ``(idx, d2)`` ascending; ``m > N`` surplus slots
+    carry ``d2 = +inf`` and an in-range index.  The ONE definition of
+    the materialized-screen contract — both ``screen_topm_ref`` and the
+    pallas-pdist materialized path of ``ops.screen_topm`` route here.
+    """
+    n = d2.shape[-1]
+    k = min(m, n)
+    neg, idx = jax.lax.top_k(-d2, k)
+    if m > k:
+        pad = ((0, 0), (0, m - k))
+        neg = jnp.pad(neg, pad, constant_values=-jnp.inf)
+        idx = jnp.pad(idx, pad)
+    return idx, -neg
+
+
+def screen_topm_ref(q: jnp.ndarray, x: jnp.ndarray, m: int,
+                    q_norms: jnp.ndarray | None = None,
+                    x_norms: jnp.ndarray | None = None
+                    ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Materialized top-m oracle: full [B, N] pdist + one ``lax.top_k``.
+
+    This is both the parity oracle for ``kernels.screen`` and the dense
+    path the engine keeps below the streamed-vs-materialized crossover.
+    """
+    return materialized_topm(pdist_ref(q, x, q_norms, x_norms), m)
+
+
 def support_sqdist_ref(q: jnp.ndarray, xs: jnp.ndarray,
                        x_norms: jnp.ndarray | None = None) -> jnp.ndarray:
     """Distances to per-query gathered rows.  q: [B, D], xs: [B, M, D],

@@ -1,0 +1,276 @@
+"""Streaming one-pass screening: fused tiled pdist + running top-m.
+
+The coarse stage of GoldDiff screens every dataset row, and the
+materialized form (``ops.pdist`` -> ``lax.top_k``) allocates the full
+``[B, N]`` proxy-distance matrix and sorts all N columns — at
+ImageNet-1K scale that buffer IS the memory wall.  This module removes
+it: the store streams through in N-tiles, each tile's distances are
+computed in the MXU matmul form, and a running top-m carry
+(values + indices) is merged per tile, so peak live memory is
+O(B * (m + tile)) instead of O(B * N) and the store is read exactly
+once.
+
+Merge math (the same two-stage trick as the cross-shard top-k in
+``distributed/sharding.py``, applied across tiles instead of shards):
+the carry holds the m best negated distances seen so far; each tile
+contributes its ``tile`` raw candidates and ONE ``lax.top_k`` over the
+``[B, m + tile]`` concatenation re-selects the running top-m.  Because
+the carry precedes the tile in the concatenation and tiles scan
+left-to-right, ties resolve to the lowest dataset index — exactly
+``lax.top_k``'s tie order — so the streamed result equals the
+materialized ``lax.top_k(-pdist, m)`` bit-for-bit (per-element distance
+dot products reduce over d in the same order regardless of N tiling).
+
+Three implementations share that math:
+
+* ``screen_topm_pallas`` — Pallas TPU kernel: flash-attention-style
+  carry of (values, indices) scratch across the N grid axis, one
+  matmul + merge per VMEM tile.  (Like the other engine kernels it is
+  validated in interpret mode; the in-kernel ``lax.top_k`` lowering on
+  real Mosaic is part of the ROADMAP real-TPU item.)
+* ``screen_topm_scan``   — XLA fallback: ``lax.scan`` over N-tiles with
+  the same carry; compiles for any backend.
+* ``ref.screen_topm_ref`` — materialized oracle (pdist + top_k).
+
+``full_scan_partial_stream`` applies the identical tiling to the exact
+posterior mean (Eq. 2): an online-softmax (max, denom, accumulator)
+carry over N-tiles — the XLA twin of the Pallas
+``golden_aggregate`` kernel — so ``full_scan`` baselines run at N where
+the dense ``[B, N]`` logits matrix cannot be allocated at all.
+
+Slot semantics (shared with ``ops.ivf_screen``): when ``m`` exceeds the
+number of rows, surplus slots carry ``d2 = +inf`` and an in-range
+(clamped) index, so downstream gathers stay valid and +inf marks
+padding.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+DEFAULT_BQ = 8
+DEFAULT_TILE = 4096
+
+
+def _merge_topm(vals, idx, neg_tile, idx_tile, m: int):
+    """One running-top-m step: re-select m from [carry | tile].
+
+    ``vals`` descending negated distances [B, m]; tile operands raw
+    [B, tile].  Carry-first concatenation keeps ``lax.top_k`` tie order
+    (lowest dataset index wins).
+    """
+    cat_v = jnp.concatenate([vals, neg_tile], axis=-1)
+    cat_i = jnp.concatenate([idx, idx_tile], axis=-1)
+    new_v, sel = jax.lax.top_k(cat_v, m)
+    return new_v, jnp.take_along_axis(cat_i, sel, axis=-1)
+
+
+# -- Pallas kernel ------------------------------------------------------------
+
+def _screen_kernel(q_ref, x_ref, qn_ref, xn_ref, idx_out, d2_out,
+                   vals_ref, idx_ref, *, m: int, bn: int, nn: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        vals_ref[...] = jnp.full_like(vals_ref, -jnp.inf)
+        idx_ref[...] = jnp.zeros_like(idx_ref)
+
+    q = q_ref[...]
+    x = x_ref[...]
+    dot = jax.lax.dot_general(
+        q, x, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+    d2 = jnp.maximum(qn_ref[...] + xn_ref[...] - 2.0 * dot, 0.0)
+    base = j * bn
+    cols = base + jax.lax.broadcasted_iota(jnp.int32, d2.shape, 1)
+    new_v, new_i = _merge_topm(vals_ref[...], idx_ref[...], -d2, cols, m)
+    vals_ref[...] = new_v
+    idx_ref[...] = new_i
+
+    @pl.when(j == nn - 1)
+    def _emit():
+        idx_out[...] = idx_ref[...]
+        d2_out[...] = -vals_ref[...]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("m", "bq", "bn", "interpret"))
+def screen_topm_pallas(q: jnp.ndarray, x: jnp.ndarray, m: int,
+                       q_norms: jnp.ndarray | None = None,
+                       x_norms: jnp.ndarray | None = None,
+                       bq: int = DEFAULT_BQ, bn: int = DEFAULT_TILE,
+                       interpret: bool = True):
+    """Streaming top-m over x for q: [B, d], x: [N, d] -> (idx, d2) [B, m].
+
+    ``d2`` ascending fp32; +inf marks slots past the real rows (m > N),
+    whose indices are clamped in-range.  interpret=True on CPU.
+
+    Like the sibling Pallas kernels (``pdist``, ``golden_aggregate``)
+    the N axis is explicitly padded to a block multiple with +inf-norm
+    rows — an HBM-side copy when N % bn != 0, the established idiom
+    here.  The XLA scan twin avoids even that (clamped overlapping
+    tiles); callers who need strict O(B (m + tile)) memory on ragged N
+    use it.
+    """
+    b, d = q.shape
+    n = x.shape[0]
+    if q_norms is None:
+        q_norms = jnp.sum(q.astype(jnp.float32) ** 2, -1)
+    if x_norms is None:
+        x_norms = jnp.sum(x.astype(jnp.float32) ** 2, -1)
+
+    bq = min(bq, b)
+    bn = min(bn, max(n, 1))
+    pb = (-b) % bq
+    # pad N so every tile is full AND the carry always holds m slots
+    n_pad = max(-(-n // bn), -(-m // bn)) * bn
+    qp = jnp.pad(q, ((0, pb), (0, 0)))
+    xp = jnp.pad(x, ((0, n_pad - n), (0, 0)))
+    qn = jnp.pad(q_norms, (0, pb)).reshape(-1, 1)
+    # +inf norms on padded rows -> +inf distance -> selected last
+    xn = jnp.pad(x_norms.astype(jnp.float32), (0, n_pad - n),
+                 constant_values=jnp.inf).reshape(1, -1)
+    nb, nn = (b + pb) // bq, n_pad // bn
+
+    idx, d2 = pl.pallas_call(
+        functools.partial(_screen_kernel, m=m, bn=bn, nn=nn),
+        grid=(nb, nn),
+        in_specs=[
+            pl.BlockSpec((bq, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((bq, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=(pl.BlockSpec((bq, m), lambda i, j: (i, 0)),
+                   pl.BlockSpec((bq, m), lambda i, j: (i, 0))),
+        out_shape=(jax.ShapeDtypeStruct((b + pb, m), jnp.int32),
+                   jax.ShapeDtypeStruct((b + pb, m), jnp.float32)),
+        scratch_shapes=[
+            pltpu.VMEM((bq, m), jnp.float32),   # running negated top-m
+            pltpu.VMEM((bq, m), jnp.int32),     # their dataset indices
+        ],
+        interpret=interpret,
+    )(qp, xp, qn, xn)
+    return jnp.minimum(idx[:b], max(n - 1, 0)), d2[:b]
+
+
+# -- XLA (lax.scan) fallback --------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("m", "tile"))
+def screen_topm_scan(q: jnp.ndarray, x: jnp.ndarray, m: int,
+                     q_norms: jnp.ndarray | None = None,
+                     x_norms: jnp.ndarray | None = None,
+                     tile: int = DEFAULT_TILE):
+    """Tiled-scan twin of :func:`screen_topm_pallas` for any XLA backend.
+
+    Peak live memory O(B * (m + tile)); the [N, d] store is sliced in
+    place (``dynamic_slice``), never padded or re-materialized — a
+    ragged final tile slides back to ``[N - tile, N)`` (the
+    dynamic-slice clamp) and the already-seen overlap columns are
+    masked to -inf, so no O(N d) padded copy exists for any N.
+    """
+    n, d = x.shape
+    q32 = q.astype(jnp.float32)
+    if q_norms is None:
+        q_norms = jnp.sum(q32 ** 2, -1)
+    if x_norms is None:
+        x_norms = jnp.sum(x.astype(jnp.float32) ** 2, -1)
+    x_norms = x_norms.astype(jnp.float32)
+    tile = min(tile, max(n, 1))
+    b = q.shape[0]
+    qn = q_norms.astype(jnp.float32)[:, None]
+
+    def body(carry, start):
+        vals, idx = carry
+        eff = jnp.minimum(start, n - tile)     # ragged tail: overlap back
+        xt = jax.lax.dynamic_slice_in_dim(x, eff, tile).astype(jnp.float32)
+        xnt = jax.lax.dynamic_slice_in_dim(x_norms, eff, tile)
+        dot = jax.lax.dot_general(
+            q32, xt, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        d2 = jnp.maximum(qn + xnt[None, :] - 2.0 * dot, 0.0)
+        cols = eff + jax.lax.broadcasted_iota(jnp.int32, d2.shape, 1)
+        neg = jnp.where(cols >= start, -d2, -jnp.inf)   # mask re-seen rows
+        return _merge_topm(vals, idx, neg, cols, m), None
+
+    init = (jnp.full((b, m), -jnp.inf, jnp.float32),
+            jnp.zeros((b, m), jnp.int32))
+    (vals, idx), _ = jax.lax.scan(
+        body, init,
+        jnp.arange(0, -(-n // tile) * tile, tile, dtype=jnp.int32))
+    return jnp.minimum(idx, max(n - 1, 0)), -vals
+
+
+# -- streaming full-scan LSE (XLA twin of the golden_aggregate kernel) --------
+
+@functools.partial(jax.jit, static_argnames=("sigma2", "tile"))
+def full_scan_partial_stream(q: jnp.ndarray, x: jnp.ndarray, sigma2: float,
+                             x_norms: jnp.ndarray | None = None,
+                             tile: int = DEFAULT_TILE):
+    """Unnormalized softmax state of the FULL store, one tiled pass.
+
+    Returns ``(acc [B, D], m [B], l [B])`` with the same clamped-logit
+    (``NEG_INF`` floor) semantics as ``ops.golden_partial_aggregate``'s
+    dense full-scan case, so the states LSE-merge exactly across shards
+    (``sharding.lse_merge_mean``).  Peak live memory O(B * tile + B * D)
+    — the [B, N] logits matrix of the dense form is never built, and
+    (like :func:`screen_topm_scan`) a ragged final tile overlaps
+    backwards with the re-seen columns masked to exactly zero weight
+    instead of padding the store.
+    """
+    n, d = x.shape
+    b = q.shape[0]
+    q32 = q.astype(jnp.float32)
+    qn = jnp.sum(q32 ** 2, -1)[:, None]
+    if x_norms is None:
+        x_norms = jnp.sum(x.astype(jnp.float32) ** 2, -1)
+    x_norms = x_norms.astype(jnp.float32)
+    tile = min(tile, max(n, 1))
+    inv = 1.0 / (2.0 * float(sigma2))
+
+    def body(carry, start):
+        m_run, l_run, acc = carry
+        eff = jnp.minimum(start, n - tile)     # ragged tail: overlap back
+        xt = jax.lax.dynamic_slice_in_dim(x, eff, tile).astype(jnp.float32)
+        xnt = jax.lax.dynamic_slice_in_dim(x_norms, eff, tile)
+        dot = jax.lax.dot_general(
+            q32, xt, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        d2 = jnp.maximum(qn + xnt[None, :] - 2.0 * dot, 0.0)
+        # +inf-norm (padded) rows clamp to the finite NEG_INF sentinel —
+        # exp(NEG_INF - m) underflows to exactly 0 for any real logit,
+        # matching the dense partial; re-seen overlap columns get a hard
+        # -inf so they are zero even in the all-NEG_INF degenerate case
+        lg = jnp.maximum(-d2 * inv, NEG_INF)
+        cols = eff + jax.lax.broadcasted_iota(jnp.int32, d2.shape, 1)
+        lg = jnp.where(cols >= start, lg, -jnp.inf)
+        m_new = jnp.maximum(m_run, jnp.max(lg, -1))
+        scale = jnp.exp(m_run - m_new)
+        p = jnp.exp(lg - m_new[:, None])
+        l_new = l_run * scale + jnp.sum(p, -1)
+        acc_new = acc * scale[:, None] + jax.lax.dot_general(
+            p, xt, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    init = (jnp.full((b,), NEG_INF, jnp.float32),
+            jnp.zeros((b,), jnp.float32),
+            jnp.zeros((b, d), jnp.float32))
+    (m_run, l_run, acc), _ = jax.lax.scan(
+        body, init,
+        jnp.arange(0, -(-n // tile) * tile, tile, dtype=jnp.int32))
+    return acc, m_run, l_run
+
+
+def full_scan_stream(q: jnp.ndarray, x: jnp.ndarray, sigma2: float,
+                     x_norms: jnp.ndarray | None = None,
+                     tile: int = DEFAULT_TILE) -> jnp.ndarray:
+    """Streaming exact posterior mean (Eq. 2); [B, D] in q.dtype."""
+    acc, _, l = full_scan_partial_stream(q, x, float(sigma2),
+                                         x_norms=x_norms, tile=tile)
+    return (acc / jnp.maximum(l, 1e-30)[:, None]).astype(q.dtype)

@@ -1,10 +1,19 @@
 """Batched analytical-diffusion sampling engine (the paper's serving kind).
 
-A request is (dataset/class, num_images, seed); the engine batches
-requests per step, runs GoldDiff DDIM sampling with per-step static
-(m_t, k_t) programs, and — under a mesh — shards the dataset store over
-the `data` axis using the distributed golden retrieval path
-(repro.distributed.retrieval).
+A request is (dataset/class, num_images, seed); ``ServeEngine`` batches
+requests per wave and runs GoldDiff DDIM sampling.  With the Optimal
+base the whole trajectory runs through ``sample_scan`` over the masked
+(scan/pjit-compatible) ``GoldDiff.call_masked`` body, so serving
+compiles ONE program per batch shape — not one program per (step,
+request) pair — and a warm engine answers any request at an
+already-compiled batch size without touching the compiler.  Patch-family
+bases need static per-step patch sizes, so they keep the per-step
+static-program sampler.  Under a mesh the golden store is data-sharded
+through the engine's shard_map pipeline (``GoldDiff(mesh=...)``).
+
+(Historical note: this class used to be called ``GoldDiffEngine``,
+shadowing the unrelated execution engine ``core.engine.GoldDiffEngine``
+— it is the *serving* layer on top of that engine.)
 
   PYTHONPATH=src python -m repro.launch.serve --dataset cifar_like \
       --n 4096 --requests 2 --batch 8
@@ -19,8 +28,9 @@ from typing import Iterable
 import jax
 import numpy as np
 
-from repro.core import GoldDiff, GoldDiffConfig, make_schedule, sample
-from repro.core.denoisers import make_denoiser
+from repro.core import (GoldDiff, GoldDiffConfig, make_schedule, sample,
+                        sample_scan)
+from repro.core.denoisers import OptimalDenoiser, make_denoiser
 from repro.data import make_dataset
 
 
@@ -39,23 +49,37 @@ class Result:
     latency_s: float
 
 
-class GoldDiffEngine:
+class ServeEngine:
     """Training-free generation service over a fixed dataset store."""
 
     def __init__(self, dataset: str, dataset_kw: dict | None = None,
                  base: str = "optimal", schedule: str = "ddpm_linear",
                  num_steps: int = 10, gd_cfg: GoldDiffConfig | None = None,
-                 max_batch: int = 16):
+                 max_batch: int = 16, mesh=None):
         self.store = make_dataset(dataset, **(dataset_kw or {}))
         self.schedule = make_schedule(schedule, 1000)
         self.num_steps = num_steps
         self.max_batch = max_batch
         base_den = make_denoiser(base, self.store, self.schedule)
-        self.denoiser = GoldDiff(base_den, gd_cfg or GoldDiffConfig())
+        self.denoiser = GoldDiff(base_den, gd_cfg or GoldDiffConfig(),
+                                 mesh=mesh)
+
+    def _scan_compatible(self) -> bool:
+        """One-program serving needs the masked body: a GoldDiff over
+        the Optimal base (patch bases require static patch sizes)."""
+        return (hasattr(self.denoiser, "call_masked")
+                and isinstance(getattr(self.denoiser, "base", None),
+                               OptimalDenoiser))
 
     def _sample(self, batch: int, seed: int) -> np.ndarray:
-        x = sample(self.denoiser, self.schedule, (batch, self.store.dim),
-                   jax.random.PRNGKey(seed), num_steps=self.num_steps)
+        rng = jax.random.PRNGKey(seed)
+        shape = (batch, self.store.dim)
+        if self._scan_compatible():
+            x = sample_scan(self.denoiser.call_masked, self.schedule, shape,
+                            rng, num_steps=self.num_steps)
+        else:
+            x = sample(self.denoiser, self.schedule, shape, rng,
+                       num_steps=self.num_steps)
         return np.asarray(x).reshape((batch,) + self.store.image_shape)
 
     def serve(self, requests: Iterable[Request]) -> list[Result]:
@@ -93,8 +117,8 @@ def main():
     ap.add_argument("--steps", type=int, default=10)
     args = ap.parse_args()
 
-    eng = GoldDiffEngine(args.dataset, {"n": args.n}, base=args.base,
-                         num_steps=args.steps, max_batch=args.batch)
+    eng = ServeEngine(args.dataset, {"n": args.n}, base=args.base,
+                      num_steps=args.steps, max_batch=args.batch)
     reqs = [Request(i, args.batch, seed=100 + i) for i in range(args.requests)]
     t0 = time.time()
     results = eng.serve(reqs)

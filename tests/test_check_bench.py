@@ -66,6 +66,32 @@ def test_recall_out_of_range(tmp_path):
     assert len(fails) == 1 and "outside [0, 1]" in fails[0]
 
 
+def test_parity_floor(tmp_path):
+    """parity/ cells gate at the exactness floor (0.999), far tighter
+    than recall's 0.95 — 0.98 must fail as parity but pass as recall."""
+    p = _write(tmp_path, "BENCH_p.json",
+               {"parity/screen/N1/m1": 1.0, "parity/screen/N2/m2": 0.98,
+                "parity/screen/N3/m3": 1.2})
+    fails = check_bench.check_file(p, 1.0)
+    assert len(fails) == 2
+    assert any("exact-parity floor" in f and "N2" in f for f in fails)
+    assert any("outside [0, 1]" in f and "N3" in f for f in fails)
+
+
+def test_memory_pair_gated(tmp_path):
+    """materialized_mem -> streamed_mem is a gated pair: streaming must
+    never allocate more than the materialized form it replaces."""
+    good = _write(tmp_path, "BENCH_m.json",
+                  {"screen/materialized_mem/N1": 16e6,
+                   "screen/streamed_mem/N1": 1.3e6})
+    assert check_bench.check_file(good, 1.0) == []
+    bad = _write(tmp_path, "BENCH_m2.json",
+                 {"screen/materialized_mem/N1": 1.0e6,
+                  "screen/streamed_mem/N1": 2.0e6})
+    fails = check_bench.check_file(bad, 1.0)
+    assert len(fails) == 1 and "streamed_mem" in fails[0]
+
+
 def test_cli_exit_codes(tmp_path):
     """End-to-end: exit 1 + message on a broken record, exit 0 on good."""
     _write(tmp_path, "BENCH_bad.json", "{oops")

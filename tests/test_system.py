@@ -23,9 +23,9 @@ def test_end_to_end_generation_quality():
 
 
 def test_serving_engine():
-    from repro.launch.serve import GoldDiffEngine, Request
-    eng = GoldDiffEngine("gmm", {"n": 1024, "dim": 16}, base="optimal",
-                         num_steps=5, max_batch=4)
+    from repro.launch.serve import Request, ServeEngine
+    eng = ServeEngine("gmm", {"n": 1024, "dim": 16}, base="optimal",
+                      num_steps=5, max_batch=4)
     res = eng.serve([Request(0, 3, seed=1), Request(1, 2, seed=2),
                      Request(2, 6, seed=3)])
     assert [r.request_id for r in res] == [0, 1, 2]
