@@ -1,0 +1,175 @@
+"""Serving cost of the three trajectory execution modes (PR 5's claim).
+
+Compares, on identical DDIM trajectories:
+
+* **static**   — one program per timestep: exact per-step FLOPs (the
+  paper's complexity table) but T cold compiles per batch shape;
+* **masked**   — PR 4's single scan program: 1 cold compile but every
+  step padded to the worst-case (m_max, k_max);
+* **plan**     — bucketed shape compilation (``core/plan.py``):
+  ``plan.num_buckets`` (typically 3-4) compiles at near-static FLOPs.
+
+Three kinds of cells go into ``BENCH_serve.json``:
+
+* ``serve/cold_programs/...`` + ``serve/cold_traj_us/...`` — denoise
+  programs compiled for one batch shape, and the first (compiling)
+  trajectory's wall-clock.  ``serve/warm_traj_us/...`` is the warm
+  trajectory (recorded unpaired: on XLA:CPU the padded masked program
+  and the plan differ by ~the padding overhead, which is small at
+  these toy N).
+* ``serve/{static,plan,masked}_flops/...`` — per-query candidate/
+  support FLOPs summed over the trajectory (the quantity the caps
+  actually pad).  ``static_flops -> plan_flops`` is a GATED pair:
+  ``check_bench`` fails if the plan pays more than
+  ``PLAN_FLOP_OVERHEAD_MAX`` (1.2x) of static mode's FLOPs.
+* ``parity/serve/...`` — fraction of generated images matching static
+  mode's within 1e-4 relative tolerance, exact and indexed paths,
+  gated >= 0.999.
+
+  PYTHONPATH=src python -m benchmarks.serve_latency
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import time_call
+from repro.core import (GoldDiff, GoldDiffConfig, OptimalDenoiser,
+                        build_plan, make_schedule, sample, sample_plan,
+                        sample_scan)
+from repro.data import gmm
+from repro.index import build_index
+
+BENCH_JSON = "BENCH_serve.json"
+
+
+def _image_parity(a, b, tol: float = 1e-4) -> float:
+    """Fraction of rows of ``a`` matching ``b`` within relative tol."""
+    a, b = np.asarray(a), np.asarray(b)
+    scale = np.abs(b).max() + 1e-9
+    return float(np.mean(np.abs(a - b).max(axis=-1) <= tol * scale))
+
+
+def _fresh(store, sch, cfg, index=None):
+    return GoldDiff(OptimalDenoiser(store, sch), cfg, index=index,
+                    index_mode="always" if index is not None else "auto")
+
+
+def _denoise_programs(gd) -> int:
+    """Denoise-path programs in the engine cache (init/aux excluded)."""
+    return sum(1 for k in gd.engine._programs
+               if k[0] in ("denoise", "plan_seg", "serve_scan"))
+
+
+def run(fast: bool = True):
+    n, batch, steps = (2048, 8, 10) if fast else (16384, 16, 10)
+    sch = make_schedule("ddpm_linear", 1000)
+    cfg = GoldDiffConfig()
+    store = gmm(n, dim=16, num_modes=8, spread=0.05, seed=0)
+    rng = jax.random.PRNGKey(0)
+    shape = (batch, 16)
+    rows = []
+
+    def make(mode, gd):
+        if mode == "static":
+            return lambda: sample(gd, sch, shape, rng, num_steps=steps)
+        if mode == "masked":
+            key = ("serve_scan", shape, steps)
+            fn = gd.engine.program(key, lambda: jax.jit(
+                lambda r: sample_scan(gd.call_masked, sch, shape, r,
+                                      num_steps=steps)))
+            return lambda: fn(rng)
+        plan = build_plan(gd.engine, steps)
+        return lambda: sample_plan(gd.call_masked, sch, shape, rng, plan,
+                                   program_cache=gd.engine.program)
+
+    plan = build_plan(_fresh(store, sch, cfg).engine, steps)
+    flops = {"static": plan.exact_flops, "plan": plan.padded_flops,
+             "masked": build_plan(_fresh(store, sch, cfg).engine, steps,
+                                  threshold=float("inf")).padded_flops}
+    outs = {}
+    for mode in ("static", "masked", "plan"):
+        gd = _fresh(store, sch, cfg)
+        fn = make(mode, gd)
+        t0 = time.perf_counter()
+        outs[mode] = np.asarray(jax.block_until_ready(fn()))
+        cold_s = time.perf_counter() - t0
+        warm_s = time_call(fn)
+        rows.append({"kind": "serve", "method": f"{mode}_mode", "N": n,
+                     "steps": steps, "time_per_step_s": warm_s / steps,
+                     "cold_s": cold_s,
+                     "programs": _denoise_programs(gd),
+                     "flops": flops[mode],
+                     "flop_ratio_vs_static": flops[mode] / flops["static"]})
+    parity = _image_parity(outs["plan"], outs["static"])
+    rows[-1]["parity"] = parity
+
+    # indexed path: plan-vs-static parity on a clustered store
+    cfg_ix = GoldDiffConfig(m_min_frac=1 / 64, m_max_frac=1 / 16,
+                            k_min_frac=1 / 128, k_max_frac=1 / 64)
+    store_ix = gmm(2 * n, dim=16, num_modes=32, spread=0.05, seed=3)
+    ix = build_index(store_ix, num_clusters=64)
+    gd_st = _fresh(store_ix, sch, cfg_ix, index=ix)
+    gd_pl = _fresh(store_ix, sch, cfg_ix, index=ix)
+    plan_ix = build_plan(gd_pl.engine, steps)
+    x_st = sample(gd_st, sch, shape, rng, num_steps=steps)
+    x_pl = sample_plan(gd_pl.call_masked, sch, shape, rng, plan_ix,
+                       program_cache=gd_pl.engine.program)
+    parity_ix = _image_parity(x_pl, x_st)
+    rows.append({"kind": "serve_indexed", "method": "plan_mode",
+                 "N": 2 * n, "steps": steps,
+                 "time_per_step_s": None,
+                 "programs": _denoise_programs(gd_pl),
+                 "flops": plan_ix.padded_flops, "parity": parity_ix})
+    rows.append({"kind": "serve_indexed", "method": "static_mode",
+                 "N": 2 * n, "steps": steps, "time_per_step_s": None,
+                 "programs": _denoise_programs(gd_st),
+                 "flops": plan_ix.exact_flops})
+
+    by = {r["method"]: r for r in rows if r["kind"] == "serve"}
+    summary = (f"plan: {by['plan_mode']['programs']} programs vs "
+               f"{by['static_mode']['programs']} static / "
+               f"{by['masked_mode']['programs']} masked; padded-FLOP "
+               f"ratio {by['plan_mode']['flop_ratio_vs_static']:.3f}x "
+               f"(masked {by['masked_mode']['flop_ratio_vs_static']:.3f}x, "
+               f"gate <= 1.2x); parity exact {parity:.4f} / indexed "
+               f"{parity_ix:.4f} (gate >= 0.999)")
+    return rows, summary
+
+
+def write_bench_json(rows, path: str = BENCH_JSON) -> None:
+    """Machine-readable record.  ``*_flops`` cells are per-query
+    trajectory FLOPs — check_bench gates static_flops -> plan_flops at
+    <= PLAN_FLOP_OVERHEAD_MAX; parity/ cells gated >= 0.999; timing
+    and program-count cells recorded unpaired."""
+    record = {}
+    for r in rows:
+        tag = f"{r['kind']}/N{r['N']}/steps{r['steps']}"
+        method = r["method"].replace("_mode", "")
+        if r.get("time_per_step_s") is not None:
+            record[f"serve/warm_step_us/{method}/{tag}"] = \
+                round(r["time_per_step_s"] * 1e6, 1)
+            record[f"serve/cold_traj_us/{method}/{tag}"] = \
+                round(r["cold_s"] * 1e6, 1)
+        record[f"serve/cold_programs/{method}/{tag}"] = r["programs"]
+        record[f"serve/{method}_flops/{tag}"] = round(r["flops"], 1)
+        if "parity" in r:
+            record[f"parity/{tag}/plan_vs_static"] = round(r["parity"], 6)
+    with open(path, "w") as f:
+        json.dump(record, f, indent=2, sort_keys=True)
+
+
+def main():
+    rows, summary = run(fast=True)
+    for r in rows:
+        print(r)
+    write_bench_json(rows)
+    print(f"# wrote {BENCH_JSON}")
+    print(f"# {summary}")
+
+
+if __name__ == "__main__":
+    main()

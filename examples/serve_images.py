@@ -1,12 +1,19 @@
 """End-to-end serving driver (the paper's inference kind, deliverable b).
 
-Stands up the GoldDiffEngine over a CIFAR-scale procedural dataset and
-serves a queue of batched generation requests, reporting per-request
-latency and throughput; then repeats with the full-scan baseline engine
-to show the speedup on identical requests.
+Stands up the serving engine over a CIFAR-scale procedural dataset,
+precompiles every (batch-bucket x shape-bucket) program with
+``warmup()``, and serves a queue of batched generation requests,
+reporting per-request latency and throughput; then repeats with the
+full-scan baseline engine to show the speedup on identical requests.
 
-  PYTHONPATH=src python examples/serve_images.py
+``--plan`` (default) serves through the bucketed trajectory plan —
+3-4 compiled programs per batch shape at near-static FLOPs;
+``--no-plan`` falls back to the single worst-case-padded masked
+program; ``--buckets N`` forces a shape-program budget.
+
+  PYTHONPATH=src python examples/serve_images.py [--no-plan] [--buckets 2]
 """
+import argparse
 import time
 
 import numpy as np
@@ -15,12 +22,34 @@ from repro.launch.serve import Request, ServeEngine
 
 
 def main():
-    n, batch = 2048, 8
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=2048)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--steps", type=int, default=10)
+    ap.add_argument("--plan", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="bucketed trajectory plan (default); --no-plan "
+                         "uses the single worst-case-padded masked program")
+    ap.add_argument("--buckets", type=int, default=None,
+                    help="cap the number of shape buckets (compiled "
+                         "programs per batch shape; floor: one per "
+                         "indexed/exact routing region)")
+    args = ap.parse_args()
+    n, batch = args.n, args.batch
     reqs = [Request(i, num_images=4, seed=100 + i) for i in range(4)]
 
     print(f"== GoldDiff engine (N={n}) ==")
     eng = ServeEngine("cifar_like", {"n": n}, base="optimal",
-                      num_steps=10, max_batch=batch)
+                      num_steps=args.steps, max_batch=batch,
+                      mode="plan" if args.plan else "scan",
+                      max_buckets=args.buckets)
+    if eng.plan is not None:
+        print(eng.plan.describe())
+    stats = eng.warmup()
+    print(f"  warmup: {stats['programs_compiled']} programs "
+          f"({len(stats['batch_buckets'])} batch buckets x "
+          f"{stats['shape_buckets']} shape buckets) "
+          f"in {stats['warmup_s']:.2f}s")
     t0 = time.time()
     res = eng.serve(list(reqs))
     t_gold = time.time() - t0
@@ -28,17 +57,19 @@ def main():
         print(f"  request {r.request_id}: {r.images.shape} "
               f"latency={r.latency_s:.2f}s finite={np.isfinite(r.images).all()}")
     n_img = sum(r.images.shape[0] for r in res)
-    print(f"  {n_img} images in {t_gold:.2f}s ({t_gold/n_img:.3f}s/img)")
+    print(f"  {n_img} images in {t_gold:.2f}s ({t_gold/n_img:.3f}s/img, warm)")
 
     print(f"== full-scan baseline engine (same requests) ==")
 
     class FullScanEngine(ServeEngine):
         def __init__(self, *a, **kw):
+            kw["mode"] = "static"      # the raw base has no masked body
             super().__init__(*a, **kw)
             self.denoiser = self.denoiser.base       # unwrap GoldDiff
 
     eng2 = FullScanEngine("cifar_like", {"n": n}, base="optimal",
-                          num_steps=10, max_batch=batch)
+                          num_steps=args.steps, max_batch=batch)
+    eng2.warmup()        # warm both engines: compare compute, not compiles
     t0 = time.time()
     res2 = eng2.serve(list(reqs))
     t_full = time.time() - t0

@@ -11,8 +11,11 @@ fractions in [0, 1].  Cells pair up when their names differ only by a
 
 For each pair the speedup baseline/subject must stay >= the threshold
 (default 1.0, i.e. the optimized path never regresses past its
-baseline), and every recall cell must stay >= 0.95.  Run it from the
-repo root:
+baseline), and every recall cell must stay >= 0.95.  *Budget* pairs
+(``BUDGET_PAIRS``) run the other way: the subject may exceed its
+baseline, but only by the listed factor — e.g. the trajectory plan's
+padded FLOPs (BENCH_serve.json) must stay <= 1.2x static mode's.  Run
+it from the repo root:
 
   PYTHONPATH=src python scripts/check_bench.py [--threshold 1.0] [--dir .]
 """
@@ -32,6 +35,13 @@ PAIRS = {
     # peak-temp-memory pair (bytes): the streamed screen must never
     # allocate MORE than the materialized [B, N] form it replaces
     "materialized_mem": "streamed_mem",
+}
+# budget pairs run the OTHER way: the subject may cost MORE than the
+# baseline, but only up to the listed factor.  Used for the trajectory
+# plan's padded candidate/support FLOPs (BENCH_serve.json): bucketed
+# shape compilation must stay within 1.2x of per-step static mode.
+BUDGET_PAIRS = {
+    "static_flops": ("plan_flops", 1.2),
 }
 RECALL_MIN = 0.95
 # parity/ cells are exactness fractions (e.g. streamed-vs-materialized
@@ -85,6 +95,24 @@ def check_file(path: str, threshold: float) -> list[str]:
             continue
         parts = name.split("/")
         for i, seg in enumerate(parts):
+            budget = BUDGET_PAIRS.get(seg)
+            if budget is not None:
+                subj_seg, factor = budget
+                subj_name = "/".join(parts[:i] + [subj_seg] + parts[i + 1:])
+                if subj_name in record:
+                    subj_val = record[subj_name]
+                    if value <= 0:
+                        failures.append(f"{path}: {name} has non-positive "
+                                        f"value {value}")
+                    elif subj_val <= 0:
+                        failures.append(f"{path}: {subj_name} has "
+                                        f"non-positive value {subj_val}")
+                    elif subj_val > factor * value:
+                        failures.append(
+                            f"{path}: {subj_name} = {subj_val:.4g} exceeds "
+                            f"{factor:.2f}x its budget baseline {name} = "
+                            f"{value:.4g} (ratio "
+                            f"{subj_val / value:.2f}x)")
             subj = PAIRS.get(seg)
             if subj is None:
                 continue

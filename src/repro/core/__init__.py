@@ -4,7 +4,10 @@ from repro.core.denoisers import (DENOISERS, OptimalDenoiser, PCADenoiser,
                                   PatchDenoiser, WienerDenoiser, make_denoiser)
 from repro.core.engine import GoldDiffEngine
 from repro.core.golddiff import GoldDiff, GoldDiffConfig, schedule_sizes
-from repro.core.sampler import sample, sample_scan, denoise_trajectory
+from repro.core.plan import (BucketCaps, PlanBucket, TrajectoryPlan,
+                             build_plan)
+from repro.core.sampler import (sample, sample_plan, sample_scan,
+                                denoise_trajectory)
 from repro.core.schedules import Schedule, make_schedule, sampling_timesteps
 
 __all__ = [
@@ -12,6 +15,7 @@ __all__ = [
     "DENOISERS", "OptimalDenoiser", "PCADenoiser", "PatchDenoiser",
     "WienerDenoiser", "make_denoiser",
     "GoldDiff", "GoldDiffConfig", "GoldDiffEngine", "schedule_sizes",
-    "sample", "sample_scan", "denoise_trajectory",
+    "BucketCaps", "PlanBucket", "TrajectoryPlan", "build_plan",
+    "sample", "sample_plan", "sample_scan", "denoise_trajectory",
     "Schedule", "make_schedule", "sampling_timesteps",
 ]

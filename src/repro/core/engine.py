@@ -21,8 +21,12 @@ Engine features:
 * **program cache** — compiled programs keyed on
   ``(kind, t, shape, dtype, backend)``; each timestep has static
   (m_t, k_t) so one XLA program per step (true FLOP savings, the
-  paper's complexity table), while ``denoise_masked`` is a single
-  scan/pjit-compatible program padded to (m_max, k_max).
+  paper's complexity table), while ``denoise_masked`` is a
+  scan/pjit-compatible program padded to (m_max, k_max) — or, given a
+  trajectory-plan bucket's ``caps`` (``repro.core.plan``), padded only
+  to that bucket's (m_cap, k_cap, nprobe_cap), which is how
+  ``sampler.sample_plan`` serves a whole trajectory with 3-4 compiled
+  programs at near-static FLOPs.
 * **per-timestep schedule constants** — a_t, sigma_t^2, (m_t, k_t)
   precomputed host-side once per t.
 * **bf16 storage with fp32 accumulation** — ``storage_dtype=bfloat16``
@@ -592,13 +596,14 @@ class GoldDiffEngine:
 
         return self._shard_mapped(local)
 
-    def _sharded_masked_body(self, x_t: Array, t: Array) -> Array:
+    def _sharded_masked_body(self, x_t: Array, t: Array,
+                             caps=None) -> Array:
         """Scan/pjit-compatible sharded step (one program, traced t).
 
         Mirrors ``denoise_masked`` exactly — same (m_t, k_t) masks,
-        probe schedule, and occupancy floor — with the k_t cut applied
-        through the cross-shard threshold instead of a positional mask
-        (the same set, up to distance ties).
+        per-bucket caps, probe schedule, and occupancy floor — with
+        the k_t cut applied through the cross-shard threshold instead
+        of a positional mask (the same set, up to distance ties).
         """
         from repro.distributed.retrieval import (golden_local_topk,
                                                  local_coarse_exact,
@@ -607,17 +612,15 @@ class GoldDiffEngine:
         L, ax = self._layout, self.shard_axis
         n = self.store.n
         m_min, m_max, k_min, k_max = self.cfg.sizes(n)
-        use_ix = self._use_index_masked()
-        m_cap = min(m_max, L.n_loc)
+        m_cap, k_cap, p_cap, use_ix = self._masked_caps(caps)
+        m_loc = min(m_cap, L.n_loc)
         if use_ix:
-            p_pad = self._masked_nprobe_pad()
+            p_pad = p_cap
             w_cap = min(p_pad, L.w_max)
-            k_cap = max(1, min(k_max, w_cap * L.max_cluster))
+            k_loc = max(1, min(k_cap, w_cap * L.max_cluster))
             strategy = "gather"
-            num_c = self.index.num_clusters
-            need = int(np.searchsorted(self._occ_cum, k_max) + 1)
         else:
-            k_cap = max(1, min(k_max, m_cap))
+            k_loc = max(1, min(k_cap, m_loc))
             strategy = self.strategy
         backend = self.backend
 
@@ -628,13 +631,14 @@ class GoldDiffEngine:
             m_t = jnp.floor(m_min + (m_max - m_min) * (1.0 - g)) \
                 .astype(jnp.int32)
             k_t = jnp.floor(k_min + (k_max - k_min) * g).astype(jnp.int32)
+            m_t = jnp.minimum(m_t, m_cap)
+            k_t = jnp.minimum(k_t, k_cap)
             a = jnp.asarray(self.schedule.a)[tt]
             sig = jnp.asarray(self.schedule.b)[tt] / a
             q = x_t / a
             qp = self._proxy_query(q)
             if use_ix:
-                nprobe_t = self.probe_schedule.nprobe_jnp(g, m_t, n, num_c)
-                nprobe_t = jnp.maximum(nprobe_t, min(need, num_c))
+                nprobe_t = self._masked_nprobe_t(g, m_t, k_t, p_pad)
                 cand, pd2 = ops.ivf_screen_local(
                     qp, offs, cents, cnorms, wr[0], wr[1], p_pad,
                     L.max_cluster, w_cap, L.n_loc, nprobe=nprobe_t,
@@ -642,11 +646,11 @@ class GoldDiffEngine:
                 valid = jnp.isfinite(pd2)
             else:
                 cand, valid = local_coarse_exact(
-                    qp, pr, pn, m_cap, m_max, m_t, ax, backend=backend,
+                    qp, pr, pn, m_loc, m_cap, m_t, ax, backend=backend,
                     stream=self.use_stream(x_t.shape[0], L.n_loc),
                     tile=self.screen_tile)
-            idx, neg, kth = golden_local_topk(X, xn, q, cand, valid, k_cap,
-                                              k_max, k_t, ax,
+            idx, neg, kth = golden_local_topk(X, xn, q, cand, valid, k_loc,
+                                              k_cap, k_t, ax,
                                               backend=backend,
                                               strategy=strategy)
             out = merged_golden_mean(X, idx, neg, kth, sig * sig, ax,
@@ -733,9 +737,48 @@ class GoldDiffEngine:
         touched = self._masked_nprobe_pad() * self.index.max_cluster
         return touched <= self.crossover_frac * self.store.n
 
-    def denoise_masked(self, x_t: Array, t: Array) -> Array:
-        """Scan/pjit-compatible step: shapes padded to (m_max, k_max)
-        — or to the probed capacity when indexed — sizes enter only
+    def _masked_caps(self, caps) -> tuple[int, int, int, bool]:
+        """Resolve a plan bucket's ``caps`` (or None for the legacy
+        one-program-per-trajectory mode) into the masked program's
+        static pads ``(m_cap, k_cap, nprobe_cap, use_index)``.
+
+        ``caps=None`` pads to the worst case over the whole schedule —
+        exactly the single masked program PR 4 served — while a
+        ``plan.BucketCaps`` pads only to the bucket's own maxima, which
+        is how ``sample_plan`` keeps static mode's FLOP savings at a
+        handful of compiled programs (``core/plan.py``).
+        """
+        n = self.store.n
+        _, m_max, _, k_max = self.cfg.sizes(n)
+        if caps is None:
+            use_ix = self._use_index_masked()
+            return (m_max, k_max,
+                    self._masked_nprobe_pad() if use_ix else 0, use_ix)
+        use_ix = bool(caps.indexed) and self.index is not None
+        return (min(int(caps.m_cap), n), int(caps.k_cap),
+                int(caps.nprobe_cap), use_ix)
+
+    def _masked_nprobe_t(self, g, m_t, k_t, p_cap: int):
+        """Traced probe count for the masked/plan path.
+
+        Mirrors :meth:`nprobe` exactly — the occupancy floor is
+        evaluated at the *traced* k_t (``jnp.searchsorted`` over the
+        ascending-occupancy cumsum), so on-grid steps probe the same
+        windows as their static programs — then clips at the bucket's
+        static pad ``p_cap`` (probes beyond the pad have no gather
+        lanes to land in).
+        """
+        c = self.index.num_clusters
+        nprobe_t = self.probe_schedule.nprobe_jnp(g, m_t, self.store.n, c)
+        need = jnp.searchsorted(jnp.asarray(self._occ_cum, jnp.int32),
+                                k_t.astype(jnp.int32)) + 1
+        nprobe_t = jnp.maximum(nprobe_t, jnp.minimum(need, c))
+        return jnp.clip(nprobe_t, 1, p_cap)
+
+    def denoise_masked(self, x_t: Array, t: Array, caps=None) -> Array:
+        """Scan/pjit-compatible step: shapes padded to the caps — the
+        global (m_max, k_max) / worst-case probe width by default, or a
+        plan bucket's ``caps`` (``plan.BucketCaps``) — sizes enter only
         through masks, ``t`` may be traced.
 
         Exact candidate distances are computed exactly once (over the
@@ -743,39 +786,36 @@ class GoldDiffEngine:
         aggregation softmax.
         """
         if self.mesh is not None:
-            return self._sharded_masked_body(x_t, t)
+            return self._sharded_masked_body(x_t, t, caps)
         n = self.store.n
         m_min, m_max, k_min, k_max = self.cfg.sizes(n)
+        m_cap, k_cap, p_cap, use_ix = self._masked_caps(caps)
         g = self.schedule.g(t)
         m_t = jnp.floor(m_min + (m_max - m_min) * (1.0 - g)).astype(jnp.int32)
         k_t = jnp.floor(k_min + (k_max - k_min) * g).astype(jnp.int32)
+        m_t = jnp.minimum(m_t, m_cap)
+        k_t = jnp.minimum(k_t, k_cap)
         a = jnp.asarray(self.schedule.a)[t]
         sig = jnp.asarray(self.schedule.b)[t] / a
         q = x_t / a
-        if self._use_index_masked():
+        if use_ix:
             # probe width varies with the traced t through the mask; the
-            # gather is padded to the worst-case nprobe over the t grid.
-            # All probed rows are candidates (IVF-Flat), so the
+            # gather is padded to the bucket's (or the grid's) worst
+            # case.  All probed rows are candidates (IVF-Flat), so the
             # time-aware candidate budget is nprobe_t, not the m_t mask.
-            p_pad = self._masked_nprobe_pad()
+            p_pad = p_cap
             m_pad = p_pad * self.index.max_cluster
-            nprobe_t = self.probe_schedule.nprobe_jnp(
-                g, m_t, n, self.index.num_clusters)
-            # static occupancy floor (worst k over the grid): the probed
-            # windows must hold k_t real rows here too, like nprobe()
-            need = int(np.searchsorted(self._occ_cum, k_max) + 1)
-            nprobe_t = jnp.maximum(
-                nprobe_t, min(need, self.index.num_clusters))
+            nprobe_t = self._masked_nprobe_t(g, m_t, k_t, p_pad)
             pos, pd2 = self.coarse_indexed(q, m_pad, p_pad, nprobe=nprobe_t)
             cand = self.index.perm[pos]
             cand_mask = jnp.isfinite(pd2)
             strategy = "gather"          # dense [B, N] math would void
         else:                            # the index's sublinear coarse
-            m_pad = m_max
-            cand = self.coarse(q, m_max)                    # top-m sorted
+            m_pad = m_cap
+            cand = self.coarse(q, m_pad)                    # top-m sorted
             cand_mask = jnp.arange(m_pad)[None, :] < m_t
             strategy = self.strategy
-        k_pad = min(k_max, m_pad)
+        k_pad = min(k_cap, m_pad)
         d2 = ops.support_distances(q, self.X, cand, x_norms=self.x_norms,
                                    backend=self.backend,
                                    strategy=strategy)

@@ -170,11 +170,14 @@ class GoldDiff:
         return fn(x_t)
 
     # -- masked (scan-compatible) mode ----------------------------------------
-    def call_masked(self, x_t: Array, t: Array) -> Array:
+    def call_masked(self, x_t: Array, t: Array, caps=None) -> Array:
         """One-program variant: shapes padded to (m_max, k_max), sizes masked.
 
         ``t`` may be a traced integer array; m_t/k_t enter only through
         masks, so this body is safe inside ``lax.scan`` / pjit.  (Optimal
         base only: patch bases need static patch sizes -> static mode.)
+        ``caps`` (a ``plan.BucketCaps``) pads to one trajectory-plan
+        bucket's shapes instead of the global worst case — the body
+        ``sampler.sample_plan`` scans per bucket.
         """
-        return self.engine.denoise_masked(x_t, t)
+        return self.engine.denoise_masked(x_t, t, caps)

@@ -3,14 +3,25 @@
 * ``sample``        — per-step Python loop (each step may have its own
   static (m_t, k_t) program; this is the mode the benchmarks time).
 * ``sample_scan``   — single ``lax.scan`` program using a scan-compatible
-  denoiser body (e.g. ``GoldDiff.call_masked`` or a neural net); this is
-  what runs under pjit in the serving engine.
+  denoiser body (e.g. ``GoldDiff.call_masked`` or a neural net).
+* ``sample_plan``   — chained per-bucket ``lax.scan`` segments driven by a
+  ``repro.core.plan.TrajectoryPlan``: one compiled program per shape
+  bucket (typically 3-4), each padded only to its bucket's
+  (m_cap, k_cap, nprobe_cap), so serving keeps ~all of static mode's
+  FLOP savings without static mode's program-per-step compile cost.
+  This is what runs under pjit in the serving engine.
 * ``sample_conditional`` — class-conditional generation by restricting the
   dataset store to one class (paper Tab. 3, conditional columns).
 
 All samplers implement DDIM (Song et al., 2020a; eta=0 deterministic) over
 an evenly spaced sub-grid of the schedule, 10 steps by default (paper
 Sec. 4.1), with x0-prediction clipping for stability.
+
+``x_init`` (optional on every sampler) replaces the internal terminal-
+noise draw with a caller-supplied x_T — the serving engine uses it to
+give each co-batched request its own per-row noise stream.  When it is
+supplied the sampler still consumes the same PRNG splits, so trajectories
+with and without it stay comparable.
 """
 from __future__ import annotations
 
@@ -28,17 +39,23 @@ def _clip(x0: Array, clip_value: float | None) -> Array:
     return x0 if clip_value is None else jnp.clip(x0, -clip_value, clip_value)
 
 
+def _init_noise(schedule: Schedule, t0: int, shape: tuple, key: jax.Array,
+                x_init: Array | None) -> Array:
+    # For VP schedules a_T ~ 0 so x_T ~ b_T * eps; the general init is
+    # a_T * E[x0] + b_T eps ~= b_T eps (data is standardized).
+    if x_init is not None:
+        return jnp.asarray(x_init)
+    return float(schedule.b[t0]) * jax.random.normal(key, shape)
+
+
 def sample(denoiser: Callable, schedule: Schedule, shape: tuple,
            rng: jax.Array, num_steps: int = 10, eta: float = 0.0,
            clip_value: float | None = 3.0,
-           trace: bool = False):
+           trace: bool = False, x_init: Array | None = None):
     """Per-step-jit DDIM sampling.  Returns x0 (and the trajectory if asked)."""
     ts = sampling_timesteps(schedule, num_steps)
     rng, init = jax.random.split(rng)
-    t0 = int(ts[0])
-    x = float(schedule.b[t0]) * jax.random.normal(init, shape)
-    # For VP schedules a_T ~ 0 so x_T ~ b_T * eps; the general init is
-    # a_T * E[x0] + b_T eps ~= b_T eps (data is standardized).
+    x = _init_noise(schedule, int(ts[0]), shape, init, x_init)
     traj = []
     for t, t_prev in zip(ts[:-1], ts[1:]):
         x0_hat = _clip(denoiser(x, int(t)), clip_value)
@@ -56,14 +73,22 @@ def sample(denoiser: Callable, schedule: Schedule, shape: tuple,
 
 def sample_scan(denoise_masked: Callable, schedule: Schedule, shape: tuple,
                 rng: jax.Array, num_steps: int = 10,
-                clip_value: float | None = 3.0) -> Array:
-    """Single-program DDIM with a traced-timestep denoiser body."""
-    ts = jnp.asarray(sampling_timesteps(schedule, num_steps))
+                clip_value: float | None = 3.0,
+                x_init: Array | None = None) -> Array:
+    """Single-program DDIM with a traced-timestep denoiser body.
+
+    Deterministic DDIM only (the eta=0 update is fused into the scan
+    body): unlike :func:`sample` there is **no** ``eta`` parameter, and
+    passing one is a ``TypeError`` rather than a silently ignored
+    mismatch.  Stochastic (eta > 0) trajectories need the per-step
+    sampler.
+    """
+    ts_np = sampling_timesteps(schedule, num_steps)
+    ts = jnp.asarray(ts_np)
     a = jnp.asarray(schedule.a)
     b = jnp.asarray(schedule.b)
-    t0 = int(ts[0])
     rng, init = jax.random.split(rng)       # match sample()'s key schedule
-    x = float(schedule.b[t0]) * jax.random.normal(init, shape)
+    x = _init_noise(schedule, int(ts_np[0]), shape, init, x_init)
 
     def body(x, i):
         t, t_prev = ts[i], ts[i + 1]
@@ -72,6 +97,84 @@ def sample_scan(denoise_masked: Callable, schedule: Schedule, shape: tuple,
         return a[t_prev] * x0_hat + b[t_prev] * eps_hat, None
 
     x, _ = jax.lax.scan(body, x, jnp.arange(len(ts) - 1))
+    return x
+
+
+def sample_plan(denoise_masked: Callable, schedule: Schedule, shape: tuple,
+                rng: jax.Array, plan, clip_value: float | None = 3.0,
+                x_init: Array | None = None,
+                program_cache: Callable | None = None,
+                compile_only: bool = False) -> Array | None:
+    """Bucketed DDIM: one ``lax.scan`` segment per plan bucket.
+
+    ``denoise_masked`` must accept ``(x, t, caps)`` (e.g.
+    ``GoldDiff.call_masked`` / ``GoldDiffEngine.denoise_masked``);
+    ``plan`` is a ``repro.core.plan.TrajectoryPlan`` built for this
+    schedule.  The PRNG key schedule and the DDIM update are
+    bit-identical to :func:`sample_scan` — only the program
+    partitioning differs — so plan outputs match scan outputs to fp32
+    reduction order (and static-mode outputs too, since each bucket's
+    masks reproduce the per-step static shapes).
+
+    ``program_cache(key, build)`` (e.g. ``GoldDiffEngine.program``)
+    memoizes the per-bucket compiled segments: with it, a trajectory
+    compiles ``plan.num_buckets`` programs per batch shape the first
+    time and zero afterwards.  Without it the segments re-trace per
+    call (fine for one-off sampling).  Deterministic DDIM only, like
+    :func:`sample_scan`.
+
+    ``compile_only=True`` populates the cache by AOT-lowering each
+    segment for a fp32 ``shape`` input (``jit(...).lower().compile()``)
+    without executing any trajectory — the serving engine's
+    ``warmup()`` path — and returns None.  The cached entries are the
+    compiled executables, so subsequent real calls (same shape/dtype
+    key) run without touching the compiler.
+    """
+    ts = jnp.asarray(plan.ts)
+    a = jnp.asarray(schedule.a)
+    b = jnp.asarray(schedule.b)
+
+    def make_segment(bucket):
+        def segment(x):
+            def body(x, i):
+                t, t_prev = ts[i], ts[i + 1]
+                x0_hat = _clip(denoise_masked(x, t, bucket.caps), clip_value)
+                eps_hat = (x - a[t] * x0_hat) / b[t]
+                return a[t_prev] * x0_hat + b[t_prev] * eps_hat, None
+            out, _ = jax.lax.scan(body, x,
+                                  jnp.arange(bucket.start, bucket.stop))
+            return out
+        return segment
+
+    def seg_key(bucket, shp, dtype_str):
+        return ("plan_seg", bucket.start, bucket.stop, bucket.caps.sig(),
+                tuple(plan.ts), shp, dtype_str,
+                None if clip_value is None else float(clip_value))
+
+    if compile_only:
+        if program_cache is None:
+            raise ValueError("compile_only needs a program_cache to "
+                             "hold the compiled segments")
+        spec = jax.ShapeDtypeStruct(shape, jnp.float32)
+        for bucket in plan.buckets:
+            seg = make_segment(bucket)
+
+            def build(s=seg):
+                compiled = jax.jit(s).lower(spec).compile()
+                return lambda xx, _c=compiled: _c(xx)
+
+            program_cache(seg_key(bucket, shape, "float32"), build)
+        return None
+
+    rng, init = jax.random.split(rng)       # match sample()'s key schedule
+    x = _init_noise(schedule, int(plan.ts[0]), shape, init, x_init)
+    for bucket in plan.buckets:
+        seg = make_segment(bucket)
+        if program_cache is None:
+            x = seg(x)
+        else:
+            x = program_cache(seg_key(bucket, x.shape, str(x.dtype)),
+                              lambda s=seg: jax.jit(s))(x)
     return x
 
 

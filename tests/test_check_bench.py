@@ -107,3 +107,28 @@ def test_cli_exit_codes(tmp_path):
         [sys.executable, str(REPO / "scripts" / "check_bench.py"),
          "--dir", str(tmp_path)], capture_output=True, text=True)
     assert r.returncode == 0, r.stdout + r.stderr
+
+
+def test_budget_pair_gates_plan_flops(tmp_path):
+    """static_flops -> plan_flops is a budget pair: the plan may pay
+    MORE FLOPs than static, but only up to 1.2x."""
+    ok = _write(tmp_path, "BENCH_s.json",
+                {"serve/static_flops/t1": 100.0,
+                 "serve/plan_flops/t1": 110.0})
+    assert check_bench.check_file(ok, 1.0) == []
+    over = _write(tmp_path, "BENCH_o.json",
+                  {"serve/static_flops/t1": 100.0,
+                   "serve/plan_flops/t1": 130.0})
+    fails = check_bench.check_file(over, 1.0)
+    assert len(fails) == 1 and "exceeds" in fails[0] \
+        and "1.30x" in fails[0]
+    bad = _write(tmp_path, "BENCH_z.json",
+                 {"serve/static_flops/t1": 0.0,
+                  "serve/plan_flops/t1": 10.0})
+    assert any("non-positive" in f
+               for f in check_bench.check_file(bad, 1.0))
+    bad_subj = _write(tmp_path, "BENCH_y.json",
+                      {"serve/static_flops/t1": 100.0,
+                       "serve/plan_flops/t1": -1.0})
+    assert any("non-positive" in f
+               for f in check_bench.check_file(bad_subj, 1.0))

@@ -1,0 +1,229 @@
+"""Trajectory plans: bucketed shape compilation (core/plan.py).
+
+Pins the three-way contract of plan mode:
+
+* **parity** — ``sample_plan`` matches per-step static sampling to fp32
+  reduction order on the exact, indexed, and (subprocess) sharded
+  paths: within a bucket the traced masks reproduce each step's static
+  shapes exactly, so bucketing changes programs, not math.
+* **edges** — threshold 0 degenerates to static mode (one bucket per
+  step), threshold inf to the PR-4 masked mode (one bucket), and
+  ``max_buckets`` forces a program budget.
+* **program economy** — a trajectory compiles exactly
+  ``plan.num_buckets`` (<= 4 at the default threshold) denoise
+  programs per batch shape, counted in the engine's ``_programs``
+  cache, and re-running compiles nothing.
+"""
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (GoldDiff, GoldDiffConfig, OptimalDenoiser,
+                        make_schedule, sample, sample_plan, sample_scan)
+from repro.core.plan import BucketCaps, build_plan, step_shapes
+from repro.data import gmm
+from repro.index import build_index
+
+SCH = make_schedule("ddpm_linear", 1000)
+REPO = Path(__file__).resolve().parent.parent
+
+
+def relerr(a, b):
+    a, b = np.asarray(a), np.asarray(b)
+    return np.abs(a - b).max() / (np.abs(b).max() + 1e-9)
+
+
+@pytest.fixture(scope="module")
+def gd_exact():
+    store = gmm(1024, dim=16, num_modes=8, spread=0.05, seed=0)
+    return GoldDiff(OptimalDenoiser(store, SCH), GoldDiffConfig())
+
+
+@pytest.fixture(scope="module")
+def gd_indexed():
+    store = gmm(4096, dim=16, num_modes=32, spread=0.05, seed=3)
+    cfg = GoldDiffConfig(m_min_frac=1 / 64, m_max_frac=1 / 16,
+                         k_min_frac=1 / 128, k_max_frac=1 / 64)
+    ix = build_index(store, num_clusters=64)
+    return GoldDiff(OptimalDenoiser(store, SCH), cfg, index=ix,
+                    index_mode="always")
+
+
+def test_plan_structure_and_overhead(gd_exact):
+    """Default threshold: few buckets, each under the overhead cap,
+    caps covering every member step, contiguous full coverage."""
+    plan = build_plan(gd_exact.engine, num_steps=10)
+    assert 1 <= plan.num_buckets <= 4
+    assert plan.buckets[0].start == 0
+    assert plan.buckets[-1].stop == plan.num_steps == 10
+    for a, b in zip(plan.buckets, plan.buckets[1:]):
+        assert a.stop == b.start
+    for bk in plan.buckets:
+        assert bk.overhead <= plan.threshold + 1e-9
+        for s in plan.steps[bk.start: bk.stop]:
+            assert s.m_t <= bk.caps.m_cap
+            assert s.k_t <= bk.caps.k_cap
+            assert s.nprobe_t <= bk.caps.nprobe_cap or not s.indexed
+            assert s.indexed == bk.caps.indexed
+    # the plan pays less than masked mode's full worst-case padding
+    masked = build_plan(gd_exact.engine, num_steps=10,
+                        threshold=float("inf"))
+    assert plan.padded_flops < masked.padded_flops
+    assert plan.exact_flops == masked.exact_flops
+
+
+def test_plan_edge_cases(gd_exact):
+    """threshold=0 == static (one bucket per step, zero overhead);
+    threshold=inf == masked (one bucket); max_buckets forces a count."""
+    per_step = build_plan(gd_exact.engine, num_steps=10, threshold=0.0)
+    assert per_step.num_buckets == 10
+    assert per_step.overhead == 0.0
+    one = build_plan(gd_exact.engine, num_steps=10, threshold=float("inf"))
+    assert one.num_buckets == 1
+    _, steps = step_shapes(gd_exact.engine, 10)
+    assert one.buckets[0].caps.m_cap == max(s.m_t for s in steps)
+    assert one.buckets[0].caps.k_cap == max(s.k_t for s in steps)
+    forced = build_plan(gd_exact.engine, num_steps=10, threshold=0.0,
+                        max_buckets=2)
+    assert forced.num_buckets == 2
+    # output-level degeneracies: the 1-bucket plan IS the masked scan
+    # program, the per-step plan IS static mode (same PRNG schedule)
+    rng = jax.random.PRNGKey(2)
+    x_one = sample_plan(gd_exact.call_masked, SCH, (3, 16), rng, one)
+    x_scan = sample_scan(gd_exact.call_masked, SCH, (3, 16), rng,
+                         num_steps=10)
+    assert relerr(x_one, x_scan) < 1e-6
+    x_per = sample_plan(gd_exact.call_masked, SCH, (3, 16), rng, per_step)
+    x_static = sample(gd_exact, SCH, (3, 16), rng, num_steps=10)
+    assert relerr(x_per, x_static) < 1e-6
+
+
+def test_plan_never_straddles_index_boundary():
+    """Steps the engine routes through the index cannot share a bucket
+    with exact-screening steps, no matter the threshold."""
+
+    class FakeEngine:
+        class store:
+            dim = 8
+
+        class index:
+            max_cluster = 16
+
+        schedule = SCH
+
+        def sizes(self, t):
+            return 100, 50
+
+        def use_index(self, t):
+            return t > 500          # routing flips mid-grid
+
+        def nprobe(self, t):
+            return 4
+
+    plan = build_plan(FakeEngine(), num_steps=10, threshold=float("inf"))
+    assert plan.num_buckets == 2     # inf threshold still cannot merge
+    assert plan.buckets[0].caps.indexed and not plan.buckets[1].caps.indexed
+
+
+def test_plan_vs_static_and_scan_parity_exact(gd_exact):
+    """Exact path: plan == static == scan to fp32 reduction order,
+    identical PRNG schedule across all three samplers."""
+    rng = jax.random.PRNGKey(7)
+    plan = build_plan(gd_exact.engine, num_steps=10)
+    x_static = sample(gd_exact, SCH, (4, 16), rng, num_steps=10)
+    x_scan = sample_scan(gd_exact.call_masked, SCH, (4, 16), rng,
+                         num_steps=10)
+    x_plan = sample_plan(gd_exact.call_masked, SCH, (4, 16), rng, plan,
+                         program_cache=gd_exact.engine.program)
+    assert relerr(x_plan, x_static) < 1e-5
+    assert relerr(x_plan, x_scan) < 1e-5
+
+
+def test_plan_vs_static_parity_indexed(gd_indexed):
+    """Indexed path: the traced occupancy floor (jnp.searchsorted at
+    the traced k_t) makes per-bucket probe counts equal the static
+    programs' nprobe(t), so parity is fp order here too."""
+    rng = jax.random.PRNGKey(11)
+    plan = build_plan(gd_indexed.engine, num_steps=10)
+    assert all(b.caps.indexed for b in plan.buckets)
+    x_static = sample(gd_indexed, SCH, (4, 16), rng, num_steps=10)
+    x_plan = sample_plan(gd_indexed.call_masked, SCH, (4, 16), rng, plan,
+                         program_cache=gd_indexed.engine.program)
+    assert relerr(x_plan, x_static) < 1e-5
+
+
+def test_masked_caps_equals_uncapped_masked(gd_exact):
+    """A caps tuple padded to the global worst case reproduces the
+    legacy caps=None masked program bit-for-bit."""
+    eng = gd_exact.engine
+    n = eng.store.n
+    _, m_max, _, k_max = eng.cfg.sizes(n)
+    caps = BucketCaps(m_cap=m_max, k_cap=k_max)
+    x = jax.random.normal(jax.random.PRNGKey(0), (3, 16))
+    for t in (900, 400, 50):
+        a = np.asarray(eng.denoise_masked(x, jnp.asarray(t)))
+        b = np.asarray(eng.denoise_masked(x, jnp.asarray(t), caps))
+        np.testing.assert_array_equal(a, b)
+
+
+def test_plan_program_count_and_cache_reuse():
+    """One compiled program per (bucket, batch shape), <= 4 at the
+    default threshold; re-sampling compiles nothing new."""
+    store = gmm(512, dim=16, num_modes=8, spread=0.05, seed=5)
+    gd = GoldDiff(OptimalDenoiser(store, SCH), GoldDiffConfig())
+    plan = build_plan(gd.engine, num_steps=10)
+    assert plan.num_buckets <= 4
+    rng = jax.random.PRNGKey(0)
+    sample_plan(gd.call_masked, SCH, (4, 16), rng, plan,
+                program_cache=gd.engine.program)
+    segs = [k for k in gd.engine._programs if k[0] == "plan_seg"]
+    assert len(segs) == plan.num_buckets
+    n0 = len(gd.engine._programs)
+    sample_plan(gd.call_masked, SCH, (4, 16), rng, plan,
+                program_cache=gd.engine.program)
+    assert len(gd.engine._programs) == n0            # warm: zero compiles
+    sample_plan(gd.call_masked, SCH, (8, 16), rng, plan,
+                program_cache=gd.engine.program)     # new batch shape
+    segs = [k for k in gd.engine._programs if k[0] == "plan_seg"]
+    assert len(segs) == 2 * plan.num_buckets
+
+
+@pytest.mark.slow
+def test_sharded_plan_parity_subprocess():
+    """sample_plan over a data-sharded engine == single-host static
+    sampling, on an emulated 8-device mesh (uneven N % 8)."""
+    code = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, numpy as np
+from repro.core import (GoldDiff, GoldDiffConfig, OptimalDenoiser,
+                        make_schedule, sample, sample_plan, build_plan)
+from repro.data import gmm
+
+mesh = jax.make_mesh((8,), ("data",))
+store = gmm(1003, dim=16, num_modes=8, spread=0.05, seed=0)
+sch = make_schedule("ddpm_linear", 1000)
+gd_ref = GoldDiff(OptimalDenoiser(store, sch), GoldDiffConfig())
+gd_sh = GoldDiff(OptimalDenoiser(store, sch), GoldDiffConfig(), mesh=mesh)
+plan = build_plan(gd_sh.engine, num_steps=8)
+rng = jax.random.PRNGKey(11)
+x_ref = np.asarray(sample(gd_ref, sch, (4, 16), rng, num_steps=8))
+x_sh = np.asarray(sample_plan(gd_sh.call_masked, sch, (4, 16), rng, plan,
+                              program_cache=gd_sh.engine.program))
+err = np.abs(x_sh - x_ref).max() / (np.abs(x_ref).max() + 1e-9)
+segs = sum(1 for k in gd_sh.engine._programs if k[0] == "plan_seg")
+print("rel err", err, "segments", segs)
+print("PASS" if err < 1e-5 and segs == plan.num_buckets else "FAIL")
+"""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    env["JAX_PLATFORMS"] = "cpu"
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, timeout=420, cwd=str(REPO), env=env)
+    assert "PASS" in r.stdout, r.stdout + r.stderr
