@@ -15,9 +15,9 @@ import traceback
 
 from benchmarks import (engine_speedup, fig3_sensitivity, fig6_hparams,
                         index_speedup, roofline, screen_speedup,
-                        serve_latency, sharded_speedup, table1_complexity,
-                        table2_quality, table3_scale, table4_edm,
-                        table5_orthogonality, table6_bias)
+                        serve_latency, serve_resilience, sharded_speedup,
+                        table1_complexity, table2_quality, table3_scale,
+                        table4_edm, table5_orthogonality, table6_bias)
 
 TABLES = {
     "table1_complexity": table1_complexity,
@@ -33,6 +33,7 @@ TABLES = {
     "index_speedup": index_speedup,
     "screen_speedup": screen_speedup,
     "serve_latency": serve_latency,
+    "serve_resilience": serve_resilience,
     "sharded_speedup": sharded_speedup,
 }
 

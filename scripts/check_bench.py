@@ -42,8 +42,16 @@ PAIRS = {
 # shape compilation must stay within 1.2x of per-step static mode.
 BUDGET_PAIRS = {
     "static_flops": ("plan_flops", 1.2),
+    # the serving runtime's delivery-time deadline check makes
+    # "completed" imply "within deadline", so p99 <= deadline holds
+    # structurally (BENCH_resilience.json) — gate it at exactly 1.0x
+    "p99_budget_us": ("p99_us", 1.0),
 }
 RECALL_MIN = 0.95
+# completion/ cells are delivered/admitted fractions under fault
+# injection (BENCH_resilience.json): the runtime must finish 100% of
+# what it admits in every regime
+COMPLETION_MIN = 1.0
 # parity/ cells are exactness fractions (e.g. streamed-vs-materialized
 # top-m candidate sets), much tighter than recall: identical up to ties
 PARITY_MIN = 0.999
@@ -84,6 +92,14 @@ def check_file(path: str, threshold: float) -> list[str]:
             elif value < RECALL_MIN:
                 failures.append(f"{path}: {name} = {value:.4f} < "
                                 f"{RECALL_MIN} (recall floor)")
+            continue
+        if name.startswith("completion/"):
+            if not 0.0 <= value <= 1.0:
+                failures.append(f"{path}: {name} = {value} outside [0, 1] "
+                                f"(not a completion fraction)")
+            elif value < COMPLETION_MIN:
+                failures.append(f"{path}: {name} = {value:.4f} < "
+                                f"{COMPLETION_MIN} (completion floor)")
             continue
         if name.startswith("parity/"):
             if not 0.0 <= value <= 1.0:

@@ -310,6 +310,10 @@ class GoldDiffEngine:
         self._consts: dict[int, tuple[float, float]] = {}
         self._sizes: dict[int, tuple[int, int]] = {}
         self._programs: dict = {}
+        # monotonic build counter: the serving runtime diffs it across a
+        # segment dispatch to detect post-warmup compiles (a cache-size
+        # delta misses evict-then-rebuild recompile storms)
+        self._builds = 0
 
     # -- precomputed per-timestep constants ----------------------------------
     def sizes(self, t: int) -> tuple[int, int]:
@@ -399,10 +403,28 @@ class GoldDiffEngine:
     def program(self, key, build):
         """Compiled-program cache keyed on (kind, t, shape, dtype,
         backend, strategy) (+ (nprobe_t, padded candidate count) when
-        the step is indexed)."""
+        the step is indexed).
+
+        This lookup is the engine's *dispatch seam*: when a fault hook
+        is installed (``ops.set_dispatch_hook``, see
+        ``repro.launch.faults``) it may evict cache entries before the
+        hit/miss check (simulated recompile storms) and wrap the
+        returned callable per dispatch (injected NaNs / latency /
+        raised executor errors).  The cache itself always stores the
+        unwrapped callable, and with no hook installed the raw cached
+        object is returned — identity, zero overhead, zero recompiles
+        (the CI recompile guard covers the warm path).
+        """
+        hook = ops.dispatch_hook()
+        if hook is not None:
+            hook.on_program(self, key)
         if key not in self._programs:
             self._programs[key] = build()
-        return self._programs[key]
+            self._builds += 1
+        fn = self._programs[key]
+        if hook is not None:
+            return hook.wrap(key, fn)
+        return fn
 
     def _index_sig(self, t: int) -> tuple:
         """(nprobe_t, padded candidate count) — keeps indexed and exact

@@ -100,6 +100,43 @@ def sample_scan(denoise_masked: Callable, schedule: Schedule, shape: tuple,
     return x
 
 
+def plan_segment(denoise_masked: Callable, schedule: Schedule, plan, bucket,
+                 clip_value: float | None = 3.0) -> Callable:
+    """One plan bucket's ``lax.scan`` segment as a standalone x -> x fn.
+
+    Module-level (rather than a closure inside :func:`sample_plan`) so
+    the serving runtime can execute, retry, and re-enter *individual*
+    segments — its admission / deadline-expiry boundaries are exactly
+    these bucket seams.  ``sample_plan`` chains the same functions, so
+    a trajectory stitched segment-by-segment from the same compiled
+    programs is bit-identical to one ``sample_plan`` call.
+    """
+    ts = jnp.asarray(plan.ts)
+    a = jnp.asarray(schedule.a)
+    b = jnp.asarray(schedule.b)
+
+    def segment(x):
+        def body(x, i):
+            t, t_prev = ts[i], ts[i + 1]
+            x0_hat = _clip(denoise_masked(x, t, bucket.caps), clip_value)
+            eps_hat = (x - a[t] * x0_hat) / b[t]
+            return a[t_prev] * x0_hat + b[t_prev] * eps_hat, None
+        out, _ = jax.lax.scan(body, x,
+                              jnp.arange(bucket.start, bucket.stop))
+        return out
+    return segment
+
+
+def plan_segment_key(plan, bucket, shape: tuple, dtype_str: str,
+                     clip_value: float | None) -> tuple:
+    """The program-cache key of one plan segment (shared between
+    ``sample_plan``'s warmup/execution paths and the serving runtime —
+    one definition, so precompiled entries are always cache hits)."""
+    return ("plan_seg", bucket.start, bucket.stop, bucket.caps.sig(),
+            tuple(plan.ts), shape, dtype_str,
+            None if clip_value is None else float(clip_value))
+
+
 def sample_plan(denoise_masked: Callable, schedule: Schedule, shape: tuple,
                 rng: jax.Array, plan, clip_value: float | None = 3.0,
                 x_init: Array | None = None,
@@ -130,26 +167,12 @@ def sample_plan(denoise_masked: Callable, schedule: Schedule, shape: tuple,
     compiled executables, so subsequent real calls (same shape/dtype
     key) run without touching the compiler.
     """
-    ts = jnp.asarray(plan.ts)
-    a = jnp.asarray(schedule.a)
-    b = jnp.asarray(schedule.b)
-
     def make_segment(bucket):
-        def segment(x):
-            def body(x, i):
-                t, t_prev = ts[i], ts[i + 1]
-                x0_hat = _clip(denoise_masked(x, t, bucket.caps), clip_value)
-                eps_hat = (x - a[t] * x0_hat) / b[t]
-                return a[t_prev] * x0_hat + b[t_prev] * eps_hat, None
-            out, _ = jax.lax.scan(body, x,
-                                  jnp.arange(bucket.start, bucket.stop))
-            return out
-        return segment
+        return plan_segment(denoise_masked, schedule, plan, bucket,
+                            clip_value)
 
     def seg_key(bucket, shp, dtype_str):
-        return ("plan_seg", bucket.start, bucket.stop, bucket.caps.sig(),
-                tuple(plan.ts), shp, dtype_str,
-                None if clip_value is None else float(clip_value))
+        return plan_segment_key(plan, bucket, shp, dtype_str, clip_value)
 
     if compile_only:
         if program_cache is None:

@@ -238,7 +238,13 @@ def lse_merge_mean(acc: jnp.ndarray, m: jnp.ndarray, l: jnp.ndarray,
     to the single-host softmax up to fp32 reduction order.
     """
     m_g = jax.lax.pmax(m, axis)
-    sc = jnp.exp(m - m_g)
+    # NaN guard: if EVERY shard carries a hard -inf max (a degenerate
+    # all-masked candidate set that bypassed the finite sentinel),
+    # ``m - m_g`` is ``-inf - -inf`` = NaN; such shards have zero
+    # weight by definition, so their scale is forced to 0 and the merge
+    # degrades to a finite zero-mean instead of propagating NaN.
+    diff = m - m_g
+    sc = jnp.where(jnp.isnan(diff), 0.0, jnp.exp(diff))
     l_g = jax.lax.psum(l * sc, axis)
     acc_g = jax.lax.psum(acc * sc[:, None], axis)
     return acc_g / jnp.maximum(l_g, 1e-30)[:, None]

@@ -18,6 +18,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import ref
+
 NEG_INF = -1e30
 DEFAULT_BQ = 8
 DEFAULT_BN = 512
@@ -38,7 +40,12 @@ def _agg_kernel(q_ref, x_ref, qn_ref, xn_ref, out_ref,
     dot = jax.lax.dot_general(
         q, x, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
     d2 = qn_ref[...] + xn_ref[...] - 2.0 * dot          # [bq, bn]
-    logits = -d2 * inv_two_sigma2                        # padded xn = +inf -> -inf
+    # real rows clamp at the finite NEG_INF floor (extreme sigma -> a
+    # uniform aggregate, never NaN); padded rows (d2 = +inf from the
+    # +inf-norm pad) keep a hard -inf so they stay weightless even in
+    # the all-clamped degenerate case
+    logits = jnp.where(d2 == jnp.inf, -jnp.inf,
+                       jnp.maximum(-d2 * inv_two_sigma2, NEG_INF))
 
     m_prev = m_ref[...]                                  # [bq, 1]
     m_new = jnp.maximum(m_prev, jnp.max(logits, -1, keepdims=True))
@@ -84,7 +91,8 @@ def golden_aggregate(q: jnp.ndarray, x: jnp.ndarray, sigma2: float,
     nb, nn = (b + pb) // bq, (n + pn) // bn
 
     out = pl.pallas_call(
-        functools.partial(_agg_kernel, inv_two_sigma2=1.0 / (2.0 * sigma2),
+        functools.partial(_agg_kernel,
+                          inv_two_sigma2=ref.finite_inv_two_sigma2(sigma2),
                           nn=nn),
         grid=(nb, nn),
         in_specs=[

@@ -60,6 +60,36 @@ from repro.kernels.screen import (DEFAULT_TILE, full_scan_partial_stream,
 DEFAULT_BACKEND = "pallas_interpret"
 BACKENDS = ("pallas", "pallas_interpret", "xla")
 
+# -- fault-injection dispatch seam -------------------------------------------
+# The engine's compiled-program cache (``GoldDiffEngine.program``)
+# consults this module-level hook on every lookup.  With no hook
+# installed (the production default) the cache returns its raw
+# callables — identity, zero overhead, zero recompiles (guarded by the
+# CI recompile job).  ``repro.launch.faults`` installs a deterministic
+# injector here for chaos tests and the resilience benchmark; nothing
+# else should ever set it.
+_DISPATCH_HOOK = None
+
+
+def set_dispatch_hook(hook):
+    """Install (or clear, with ``None``) the dispatch fault hook.
+
+    A hook object must provide ``on_program(engine, key)`` (called on
+    every cache lookup, before the hit/miss check — it may evict) and
+    ``wrap(key, fn) -> fn`` (called on every dispatch — it may return
+    ``fn`` unchanged or a fault-wrapped callable).  Returns the
+    previously installed hook so callers can restore it.
+    """
+    global _DISPATCH_HOOK
+    prev = _DISPATCH_HOOK
+    _DISPATCH_HOOK = hook
+    return prev
+
+
+def dispatch_hook():
+    """The currently installed dispatch fault hook (``None`` = off)."""
+    return _DISPATCH_HOOK
+
 
 def pdist(q, x, q_norms=None, x_norms=None, backend: str = DEFAULT_BACKEND,
           **kw):
@@ -343,7 +373,7 @@ def golden_full_partial(q, x, sigma2: float, x_norms=None,
         return full_scan_partial_stream(q, x, float(sigma2),
                                         x_norms=x_norms, tile=tile)
     d2 = ref.pdist_ref(q, x, x_norms=x_norms)
-    lg = jnp.maximum(-d2 / (2.0 * float(sigma2)), -1e30)
+    lg = jnp.maximum(-d2 * ref.finite_inv_two_sigma2(sigma2), ref.NEG_INF)
     return golden_partial_aggregate(x, None, lg)
 
 
@@ -370,4 +400,4 @@ __all__ = ["pdist", "screen_topm", "support_sqdist", "support_distances",
            "golden_aggregate", "centroid_scan", "ivf_screen",
            "ivf_screen_local", "golden_attention_decode",
            "select_golden_blocks", "flash_attention", "DEFAULT_BACKEND",
-           "BACKENDS", "DEFAULT_TILE"]
+           "BACKENDS", "DEFAULT_TILE", "set_dispatch_hook", "dispatch_hook"]

@@ -6,6 +6,29 @@ import jax.numpy as jnp
 
 NEG_INF = -1e30
 
+# Largest inverse-temperature the aggregation softmax will use: chosen
+# so ``-d2 * inv`` stays an ordinary fp32 overflow (clamped at NEG_INF)
+# instead of the silent-NaN ``0 * inf`` that an unguarded ``1/(2*0.0)``
+# produces.  3e37 < fp32 max, and any sigma2 small enough to hit the
+# clamp already drives every finite logit to the NEG_INF floor.
+MAX_INV_TWO_SIGMA2 = 3.0e37
+
+
+def finite_inv_two_sigma2(sigma2) -> float:
+    """``1 / (2 sigma2)`` clamped to an fp32-finite inverse temperature.
+
+    Degenerate noise levels (``sigma2 <= 0``, NaN, or denormal) return
+    the finite ``MAX_INV_TWO_SIGMA2`` cap instead of raising
+    ``ZeroDivisionError`` or overflowing to +inf — callers pair the
+    result with a ``NEG_INF`` logit clamp, so the extreme-sigma limit
+    degrades to a uniform (data-mean) aggregate, never NaN.
+    """
+    s = float(sigma2)
+    if not s > 0.0:                      # 0, negative, or NaN
+        return MAX_INV_TWO_SIGMA2
+    inv = 1.0 / (2.0 * s)
+    return min(inv, MAX_INV_TWO_SIGMA2)
+
 
 def pdist_ref(q: jnp.ndarray, x: jnp.ndarray,
               q_norms: jnp.ndarray | None = None,
@@ -65,7 +88,12 @@ def support_sqdist_ref(q: jnp.ndarray, xs: jnp.ndarray,
 
 def golden_aggregate_ref(q: jnp.ndarray, x: jnp.ndarray, sigma2: float,
                          x_norms: jnp.ndarray | None = None) -> jnp.ndarray:
-    lg = -pdist_ref(q, x, x_norms=x_norms) / (2.0 * sigma2)
+    # Logits clamp at the finite NEG_INF sentinel (matching the Pallas
+    # kernel and the streamed LSE): an all-clamped row — every distance
+    # overflowed at extreme sigma — softmaxes to a uniform (data-mean)
+    # aggregate instead of the NaN an all--inf softmax produces.
+    inv = finite_inv_two_sigma2(sigma2)
+    lg = jnp.maximum(-pdist_ref(q, x, x_norms=x_norms) * inv, NEG_INF)
     w = jax.nn.softmax(lg, axis=-1)
     out = jax.lax.dot_general(w, x, (((1,), (0,)), ((), ())),
                               preferred_element_type=jnp.float32)

@@ -52,6 +52,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import ref
+
 NEG_INF = -1e30
 DEFAULT_BQ = 8
 DEFAULT_TILE = 4096
@@ -231,7 +233,10 @@ def full_scan_partial_stream(q: jnp.ndarray, x: jnp.ndarray, sigma2: float,
         x_norms = jnp.sum(x.astype(jnp.float32) ** 2, -1)
     x_norms = x_norms.astype(jnp.float32)
     tile = min(tile, max(n, 1))
-    inv = 1.0 / (2.0 * float(sigma2))
+    # finite inverse temperature: degenerate sigma2 clamps every logit
+    # at NEG_INF (uniform weights -> data mean) instead of the silent
+    # 0 * inf NaN / ZeroDivisionError of an unguarded 1 / (2 sigma2)
+    inv = ref.finite_inv_two_sigma2(sigma2)
 
     def body(carry, start):
         m_run, l_run, acc = carry

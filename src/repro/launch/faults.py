@@ -1,0 +1,220 @@
+"""Deterministic, seed-driven fault injection for the serving stack.
+
+The engine's compiled-program cache (``core.engine.GoldDiffEngine
+.program``) is the single dispatch seam every trajectory segment, scan
+program, and static step goes through.  This module installs a hook
+there (``repro.kernels.ops.set_dispatch_hook``) that draws one decision
+per dispatch from a counter-based splitmix64 stream:
+
+* same ``FaultConfig.seed`` + same dispatch order  =>  the *same*
+  faults fire at the same points, independent of wall clock, retries,
+  or host load (a retry is a new dispatch with its own decision, so
+  injected transient errors clear deterministically);
+* with no injector installed the hook slot is ``None`` and
+  ``engine.program`` returns its raw cached callables — identity,
+  zero overhead, zero recompiles (the CI recompile guard runs over the
+  uninstalled path, and ``tests/test_faults.py`` pins the identity).
+
+Fault kinds (rates are independent per-dispatch probabilities):
+
+* ``nan``        — corrupt one output row to NaN host-side *after* the
+  program ran (a silent kernel-NaN storm: exercises the runtime's
+  per-segment finite guard and the indexed->exact breaker rung);
+* ``latency``    — sleep ``latency_s`` before dispatch (stage latency
+  spikes: exercises deadlines and p99 accounting);
+* ``error``      — raise ``XlaRuntimeError("INTERNAL: ...")`` (a
+  transient executor failure: exercises retry with backoff);
+* ``oom``        — raise ``XlaRuntimeError("RESOURCE_EXHAUSTED: ...")``
+  (exercises the halve-batch / shrink-steps rung);
+* ``shard_drop`` — raise an ``XlaRuntimeError`` marked as a lost mesh
+  shard; only fires when >1 device is visible (the emulated 8-device
+  mesh in CI), inert on single-device hosts;
+* ``evict``      — delete the cache entry before the hit/miss check,
+  forcing a REAL recompile on the next lookup (a recompile storm:
+  exercises the plan->scan breaker rung honestly).
+
+Only program kinds in ``target_kinds`` are touched (default: the
+compute segments), so key-derivation / init-noise programs and the
+runtime's Gaussian fallback stay reliable by construction.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from repro.kernels import ops
+
+try:                                     # jax >= 0.4.14
+    from jax.errors import JaxRuntimeError as XlaRuntimeError
+except ImportError:                      # pragma: no cover - older jax
+    from jax._src.lib import xla_client
+    XlaRuntimeError = xla_client.XlaRuntimeError
+
+
+class TransientExecutorError(RuntimeError):
+    """Injected transient failure (non-XLA flavor, equally retryable)."""
+
+
+# what the serving runtime treats as transient-and-retryable
+RETRYABLE_ERRORS = (XlaRuntimeError, TransientExecutorError)
+
+# program kinds the injector touches by default: the trajectory compute
+# segments (plan buckets, the scan-mode program, static denoise steps,
+# full scans).  Deliberately excludes "serve_keys" / "serve_init" (the
+# per-request noise streams) and "gauss_seg" (the runtime's Gaussian
+# fallback must stay reliable for the ladder's last rung to be real).
+DEFAULT_TARGETS = ("plan_seg", "serve_scan", "denoise", "full_scan")
+
+FAULT_KINDS = ("nan", "latency", "error", "oom", "shard_drop", "evict")
+
+_M64 = (1 << 64) - 1
+_SALT = {"nan": 0x1, "latency": 0x2, "error": 0x3, "oom": 0x4,
+         "shard_drop": 0x5, "evict": 0x6, "row": 0x65}
+
+
+def _splitmix64(z: int) -> int:
+    z = (z + 0x9E3779B97F4A7C15) & _M64
+    z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & _M64
+    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & _M64
+    return z ^ (z >> 31)
+
+
+def unit_uniform(seed: int, n: int, salt: int = 0) -> float:
+    """Deterministic uniform in [0, 1) from (seed, counter, salt).
+
+    Pure integer hashing — no global RNG state, so interleaved
+    consumers (the injector's per-kind decisions, the runtime's backoff
+    jitter) never perturb each other's streams.
+    """
+    z = (seed * 0xD1B54A32D192ED03 + n * 0x8CB92BA72F3D8DD7
+         + salt * 0x2545F4914F6CDD1D) & _M64
+    return _splitmix64(z) / 2.0 ** 64
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultConfig:
+    """Per-dispatch fault probabilities (all default off)."""
+
+    seed: int = 0
+    nan_rate: float = 0.0
+    latency_rate: float = 0.0
+    latency_s: float = 0.01
+    error_rate: float = 0.0
+    oom_rate: float = 0.0
+    shard_drop_rate: float = 0.0
+    evict_rate: float = 0.0
+    target_kinds: tuple = DEFAULT_TARGETS
+
+
+class FaultInjector:
+    """The hook object ``engine.program`` consults (see module doc).
+
+    ``events`` records every fired fault as ``(kind, program_kind,
+    counter)`` tuples — the determinism and seam-reach tests assert on
+    this log.  ``dispatches`` counts wrapped executions, ``lookups``
+    counts cache lookups (the evict stream), both monotone.
+    """
+
+    def __init__(self, config: FaultConfig):
+        self.config = config
+        self.dispatches = 0
+        self.lookups = 0
+        self.events: list[tuple] = []
+
+    # -- decision stream -----------------------------------------------------
+    def _targets(self, key) -> bool:
+        return (isinstance(key, tuple) and len(key) > 0
+                and key[0] in self.config.target_kinds)
+
+    def _hit(self, n: int, kind: str, rate: float) -> bool:
+        return rate > 0.0 and \
+            unit_uniform(self.config.seed, n, _SALT[kind]) < rate
+
+    # -- hook protocol (called by GoldDiffEngine.program) --------------------
+    def on_program(self, engine, key) -> None:
+        """Cache-lookup hook: may evict the entry (recompile storm)."""
+        if not self._targets(key):
+            return
+        n = self.lookups
+        self.lookups += 1
+        if self._hit(n, "evict", self.config.evict_rate) \
+                and key in engine._programs:
+            del engine._programs[key]
+            self.events.append(("evict", key[0], n))
+
+    def wrap(self, key, fn):
+        """Dispatch hook: returns ``fn`` or a fault-wrapped callable."""
+        if not self._targets(key):
+            return fn
+
+        def wrapped(*args, **kw):
+            n = self.dispatches
+            self.dispatches += 1
+            cfg = self.config
+            if self._hit(n, "latency", cfg.latency_rate):
+                self.events.append(("latency", key[0], n))
+                time.sleep(cfg.latency_s)
+            if cfg.shard_drop_rate > 0.0 and len(jax.devices()) > 1 \
+                    and self._hit(n, "shard_drop", cfg.shard_drop_rate):
+                self.events.append(("shard_drop", key[0], n))
+                raise XlaRuntimeError(
+                    "INTERNAL: injected shard dropout: mesh device "
+                    "unavailable during collective")
+            if self._hit(n, "oom", cfg.oom_rate):
+                self.events.append(("oom", key[0], n))
+                raise XlaRuntimeError(
+                    "RESOURCE_EXHAUSTED: injected out-of-memory "
+                    "allocating temporary buffer")
+            if self._hit(n, "error", cfg.error_rate):
+                self.events.append(("error", key[0], n))
+                raise XlaRuntimeError(
+                    "INTERNAL: injected transient executor failure")
+            out = fn(*args, **kw)
+            if self._hit(n, "nan", cfg.nan_rate):
+                out = self._corrupt(out, n, key)
+            return out
+
+        return wrapped
+
+    def _corrupt(self, out, n: int, key):
+        """NaN one row of a float batch output, host-side."""
+        a = np.array(out, copy=True)
+        if a.ndim == 0 or not np.issubdtype(a.dtype, np.floating) \
+                or a.shape[0] == 0:
+            return out
+        row = int(unit_uniform(self.config.seed, n, _SALT["row"])
+                  * a.shape[0]) % a.shape[0]
+        a[row] = np.nan
+        self.events.append(("nan", key[0], n))
+        return a
+
+
+def install(config: FaultConfig) -> FaultInjector:
+    """Build an injector for ``config`` and install it as THE hook."""
+    injector = FaultInjector(config)
+    ops.set_dispatch_hook(injector)
+    return injector
+
+
+def uninstall() -> None:
+    """Clear the hook: the dispatch seam is an identity again."""
+    ops.set_dispatch_hook(None)
+
+
+def active() -> FaultInjector | None:
+    """The currently installed injector (``None`` when faults are off)."""
+    return ops.dispatch_hook()
+
+
+@contextlib.contextmanager
+def injected(config: FaultConfig):
+    """``with injected(FaultConfig(...)) as inj:`` — scoped install."""
+    injector = install(config)
+    try:
+        yield injector
+    finally:
+        uninstall()

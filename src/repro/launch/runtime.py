@@ -1,0 +1,749 @@
+"""Fault-tolerant serving runtime over :class:`ServeEngine`.
+
+``ServeEngine.serve`` is a synchronous batch call: it assumes every
+dispatch succeeds, every output is finite, and nobody is waiting with a
+deadline.  ``ServeRuntime`` wraps the same warmed engine in the
+admission / scheduling / failure machinery a service actually needs:
+
+* **admission control** — requests are validated (``validate_request``)
+  and enter a bounded queue; a full queue rejects loudly
+  (``QueueFullError``) instead of buffering without bound.
+* **plan-seam scheduling** — a wave of co-batched requests advances one
+  *trajectory-plan segment* at a time (the PR 5 bucket seams, via
+  ``sampler.plan_segment``); between segments the scheduler can admit
+  new waves, expire deadlined rows, and repack shrunken waves into
+  smaller warmed batch buckets.  All of it happens at program
+  boundaries, so the post-warmup zero-compile guarantee holds.
+* **deadlines** — per-request (``Request.deadline_s``) or a default;
+  expiry is checked at every seam *including final delivery*, so a
+  completed request is structurally within its deadline and the
+  reported p99 is bounded by it.
+* **retries** — transient executor failures (``faults.RETRYABLE_ERRORS``
+  — injected or real ``XlaRuntimeError``) retry with exponential
+  backoff and deterministic jitter; a retry re-enters the dispatch seam
+  so injected faults clear by their own seeded stream.
+* **degradation ladder** — four circuit breakers map failure classes to
+  cheaper-but-alive configurations, all precompiled by ``warmup()``:
+
+  ======================  =============================================
+  breaker (failure)       degraded rung while open
+  ======================  =============================================
+  ``screen`` (non-finite  exact-routing trajectory plan (indexed
+  rows in a segment)      screening bypassed; same plan when the
+                          engine has no index)
+  ``compile`` (post-      ``scan`` mode: one whole-trajectory program
+  warmup recompiles)      per batch bucket — no per-segment lookups to
+                          storm
+  ``oom`` (RESOURCE_      halved admission cap + half-``num_steps``
+  EXHAUSTED)              plan; an OOM-ing wave also splits in two on
+                          the spot
+  ``exec`` (other         retries; after ``max_retries`` the segment
+  transient errors)       falls back to the closed-form Gaussian
+                          (Wiener) score — finite by construction
+  ======================  =============================================
+
+* **finite-output guard** — after every segment, rows that went
+  non-finite are replaced with the Gaussian-fallback segment of the
+  same rows (never delivered as NaN; trips the ``screen`` breaker).
+* **observability** — ``health()`` snapshots queue depth, breaker
+  states, degraded flags, counters, p50/p99 latency and the
+  deadline-miss rate; ``benchmarks/serve_resilience.py`` turns the same
+  numbers into gated BENCH cells.
+
+Single-threaded by design: ``pump()`` runs one scheduler step (admit ->
+pick wave -> run one segment -> postprocess); ``run_until_idle()``
+drains inline (tests, benchmarks); ``start()``/``stop()`` run the same
+loop on a daemon thread.  A lock guards queue/wave state so submitters
+on other threads stay safe, while segment execution happens outside it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import build_plan
+from repro.core.denoisers import WienerDenoiser
+from repro.core.sampler import plan_segment, plan_segment_key, sample_plan
+from repro.core.schedules import sampling_timesteps
+from repro.launch.faults import RETRYABLE_ERRORS, unit_uniform
+from repro.launch.serve import Request, ServeEngine
+
+_SALT_JITTER = 0xB0
+
+
+class QueueFullError(RuntimeError):
+    """Admission rejected: the bounded request queue is at capacity."""
+
+
+def validate_request(req: Request, max_images: int) -> None:
+    """Admission-time validation with actionable errors (satellite 1).
+
+    ``bool`` is an ``int`` subclass, so it is rejected explicitly —
+    ``Request(0, True, 0)`` is a bug, not one image.
+    """
+    ni = req.num_images
+    if isinstance(ni, bool) or not isinstance(ni, (int, np.integer)):
+        raise ValueError(f"request {req.request_id}: num_images must be "
+                         f"an int, got {type(ni).__name__}")
+    if ni < 1:
+        raise ValueError(f"request {req.request_id}: num_images must be "
+                         f">= 1, got {ni}")
+    if ni > max_images:
+        raise ValueError(f"request {req.request_id}: num_images={ni} "
+                         f"exceeds the per-request cap {max_images}")
+    sd = req.seed
+    if isinstance(sd, bool) or not isinstance(sd, (int, np.integer)):
+        raise ValueError(f"request {req.request_id}: seed must be an "
+                         f"int, got {type(sd).__name__}")
+    if sd < 0:
+        raise ValueError(f"request {req.request_id}: seed must be "
+                         f">= 0, got {sd}")
+    if req.deadline_s is not None and not float(req.deadline_s) > 0.0:
+        raise ValueError(f"request {req.request_id}: deadline_s must be "
+                         f"positive, got {req.deadline_s}")
+
+
+@dataclasses.dataclass
+class RuntimeConfig:
+    """Knobs for the serving runtime (defaults are test-friendly).
+
+    ``clock``/``sleep`` are injectable so deadline and backoff behavior
+    is testable with a fake clock — production uses the monotonic
+    clock.  ``seed`` drives the deterministic backoff jitter.
+    """
+
+    max_queue: int = 64
+    max_images: int | None = None        # per-request cap; None -> max_batch
+    default_deadline_s: float | None = None
+    max_retries: int = 3
+    backoff_base_s: float = 0.02
+    backoff_max_s: float = 0.5
+    jitter_frac: float = 0.25
+    breaker_threshold: int = 3
+    breaker_window_s: float = 30.0
+    breaker_cooldown_s: float = 2.0
+    max_inflight_waves: int = 2
+    seed: int = 0
+    idle_sleep_s: float = 0.005
+    clock: Callable[[], float] = time.monotonic
+    sleep: Callable[[float], None] = time.sleep
+
+
+@dataclasses.dataclass
+class Ticket:
+    """Handle returned by ``submit``; filled in as the request runs."""
+
+    request: Request
+    submitted_at: float
+    expiry: float | None                 # absolute clock() time, or None
+    status: str = "queued"               # queued|running|done|expired|failed
+    images: np.ndarray | None = None
+    latency_s: float | None = None
+    degraded: bool = False               # any non-primary rung touched it
+
+
+class CircuitBreaker:
+    """Windowed failure counter with an open/half-open/closed state.
+
+    ``threshold`` failures inside ``window_s`` open the breaker for
+    ``cooldown_s``; after the cooldown it is half-open (the ladder
+    resumes the primary rung as a probe) and one recorded success
+    closes it.
+    """
+
+    def __init__(self, threshold: int, window_s: float, cooldown_s: float):
+        self.threshold = threshold
+        self.window_s = window_s
+        self.cooldown_s = cooldown_s
+        self.failures: list[float] = []
+        self.open_until: float | None = None
+
+    def record_failure(self, now: float) -> None:
+        self.failures.append(now)
+        self.failures = [t for t in self.failures
+                         if t > now - self.window_s]
+        if len(self.failures) >= self.threshold:
+            self.open_until = now + self.cooldown_s
+
+    def record_success(self, now: float) -> None:
+        if self.open_until is not None and now >= self.open_until:
+            self.open_until = None       # half-open probe succeeded
+            self.failures = []
+
+    def state(self, now: float) -> str:
+        if self.open_until is None:
+            return "closed"
+        return "open" if now < self.open_until else "half_open"
+
+    def is_open(self, now: float) -> bool:
+        return self.state(now) == "open"
+
+
+class _ExactRouting:
+    """Engine view with indexed screening forced off.
+
+    ``build_plan`` duck-types its engine (sizes / use_index / schedule /
+    store); presenting ``index = None`` and ``use_index() -> False``
+    yields a plan whose every bucket routes the exact screen — the
+    ``screen``-breaker rung.  On an engine without an index this
+    produces the identical plan (and identical program keys), so the
+    rung costs nothing to warm.
+    """
+
+    index = None
+
+    def __init__(self, engine):
+        object.__setattr__(self, "_eng", engine)
+
+    def use_index(self, t) -> bool:
+        return False
+
+    def __getattr__(self, name):
+        return getattr(self._eng, name)
+
+
+@dataclasses.dataclass
+class _Wave:
+    """One co-batched group of tickets advancing through segments."""
+
+    seq: int
+    mode: str                            # "plan" | "scan"
+    plan_name: str                       # primary|exact|short|short_exact|scan
+    plan: object | None                  # TrajectoryPlan for mode == "plan"
+    bucket: int                          # padded batch size (warmed)
+    x: np.ndarray                        # [bucket, D] fp32 state
+    parts: list                          # [(Ticket, n_rows)] prefix-packed
+    cursor: int = 0                      # next segment index
+    retries: int = 0
+    degraded: bool = False
+    running: bool = False
+
+    @property
+    def used(self) -> int:
+        return sum(n for _, n in self.parts)
+
+    def num_segments(self) -> int:
+        return self.plan.num_buckets if self.mode == "plan" else 1
+
+
+class ServeRuntime:
+    """Admission, deadlines, retries and the degradation ladder (see
+    module docstring) around one warmed :class:`ServeEngine`."""
+
+    def __init__(self, eng: ServeEngine, config: RuntimeConfig | None = None):
+        if eng.mode not in ("plan", "scan"):
+            raise ValueError(f"ServeRuntime needs a plan- or scan-mode "
+                             f"engine (got mode={eng.mode!r}); static "
+                             f"mode has no shared segment seams")
+        self.eng = eng
+        self.engine = eng.engine         # core.GoldDiffEngine (prog cache)
+        self.cfg = config or RuntimeConfig()
+        self.max_images = (self.cfg.max_images if self.cfg.max_images
+                           is not None else eng.max_batch)
+        if self.max_images > eng.max_batch:
+            raise ValueError(f"max_images={self.max_images} exceeds the "
+                             f"engine's max_batch={eng.max_batch}; a "
+                             f"runtime wave never chunks one request "
+                             f"across waves")
+        # -- degraded-plan variants (all warmed by ``warmup``)
+        self.plans: dict[str, object] = {}
+        if eng.mode == "plan":
+            ns_short = max(2, eng.num_steps // 2)
+            self.plans["primary"] = eng.plan
+            if self.engine.index is not None:
+                exact_view = _ExactRouting(self.engine)
+                self.plans["exact"] = build_plan(exact_view, eng.num_steps)
+                self.plans["short_exact"] = build_plan(exact_view, ns_short)
+                self.plans["short"] = build_plan(self.engine, ns_short)
+            else:
+                self.plans["exact"] = eng.plan
+                self.plans["short"] = build_plan(self.engine, ns_short)
+                self.plans["short_exact"] = self.plans["short"]
+        # -- breakers: one per failure class
+        mk = lambda: CircuitBreaker(self.cfg.breaker_threshold,
+                                    self.cfg.breaker_window_s,
+                                    self.cfg.breaker_cooldown_s)
+        self.br_exec = mk()
+        self.br_screen = mk()
+        self.br_oom = mk()
+        self.br_compile = mk()
+        # -- state
+        self._lock = threading.RLock()
+        self._queue: list[Ticket] = []
+        self._waves: list[_Wave] = []
+        self._seq = 0
+        self._retry_seq = 0
+        self._warm = False
+        self._builds_warm = 0
+        self._wiener: WienerDenoiser | None = None
+        self._thread: threading.Thread | None = None
+        self._stop = threading.Event()
+        self.counters = {k: 0 for k in (
+            "submitted", "completed", "expired", "failed", "retries",
+            "finite_trips", "gauss_segments", "oom_splits", "repacks",
+            "scan_waves", "exact_waves", "short_waves")}
+        self._latencies: list[float] = []
+
+    # -- Gaussian (Wiener) fallback programs ---------------------------------
+    def _wiener_den(self) -> WienerDenoiser:
+        if self._wiener is None:
+            self._wiener = WienerDenoiser(self.eng.store, self.eng.schedule)
+        return self._wiener
+
+    def _gauss_program(self, bucket: int, nts: int):
+        """Compiled closed-form-Gaussian DDIM segment for one batch
+        bucket: ``fn(x, ts, start, stop)`` runs steps [start, stop) of a
+        length-``nts`` timestep grid with the Wiener posterior mean as
+        the denoiser.  Rank-limited SVD form — finite for every finite
+        input, no data gathers, no screening: the ladder's last rung.
+
+        The ``"gauss_seg"`` kind is deliberately NOT in the fault
+        injector's default targets; a fallback that can itself be
+        faulted is not a fallback.
+        """
+        den = self._wiener_den()
+        sched = self.eng.schedule
+        clip = self.eng.clip_value
+        dim = self.eng.store.dim
+        key = ("gauss_seg", bucket, dim, nts,
+               None if clip is None else float(clip))
+
+        def build():
+            mu, V, lam = den.mu, den.V, den.lam
+            a = jnp.asarray(sched.a)
+            b = jnp.asarray(sched.b)
+
+            def seg(x, ts, start, stop):
+                def body(i, x):
+                    t, tp = ts[i], ts[i + 1]
+                    at, bt = a[t], b[t]
+                    coeff = (at * lam) / (at * at * lam + bt * bt)
+                    x0 = mu + (((x - at * mu) @ V) * coeff) @ V.T
+                    if clip is not None:
+                        x0 = jnp.clip(x0, -clip, clip)
+                    eps = (x - at * x0) / bt
+                    return a[tp] * x0 + b[tp] * eps
+                return jax.lax.fori_loop(start, stop, body, x)
+
+            return jax.jit(seg)
+
+        return self.engine.program(key, build)
+
+    def _segment_grid(self, wave: _Wave) -> tuple[tuple, int, int]:
+        """(ts, start, stop) of the wave's CURRENT segment."""
+        if wave.mode == "plan":
+            b = wave.plan.buckets[wave.cursor]
+            return tuple(wave.plan.ts), b.start, b.stop
+        ts = tuple(int(t) for t in
+                   sampling_timesteps(self.eng.schedule, self.eng.num_steps))
+        return ts, 0, len(ts) - 1
+
+    def _run_gauss(self, wave: _Wave, x: np.ndarray) -> np.ndarray:
+        ts, start, stop = self._segment_grid(wave)
+        fn = self._gauss_program(wave.bucket, len(ts))
+        out = fn(jnp.asarray(x), jnp.asarray(ts, jnp.int32),
+                 np.int32(start), np.int32(stop))
+        self.counters["gauss_segments"] += 1
+        return np.asarray(jax.block_until_ready(out), np.float32)
+
+    # -- warmup ---------------------------------------------------------------
+    def warmup(self) -> dict:
+        """Precompile every rung of the ladder for every batch bucket:
+        the engine's own programs, the degraded plan variants, the
+        scan-mode programs, and the Gaussian fallback segments.  After
+        this, NO failure path touches the compiler (``health()`` tracks
+        ``compiles_post_warmup`` via the engine's build counter, which
+        counts evict-driven rebuilds a cache-size delta would miss)."""
+        t0 = time.time()
+        stats = self.eng.warmup()
+        aot = self.engine.mesh is None
+        dim = self.eng.store.dim
+        call_masked = self.eng.denoiser.call_masked \
+            if self.eng._scan_compatible() else None
+        nts_set = {self.eng.num_steps + 1}
+        for p in self.plans.values():
+            nts_set.add(len(p.ts))
+        for b in self.eng.batch_buckets():
+            shape = (b, dim)
+            if call_masked is not None:
+                # the scan rung (plan-mode engines don't warm it)
+                fn = self.eng._scan_program(shape, compile_only=aot)
+                if not aot:
+                    jax.block_until_ready(fn(jnp.zeros(shape, jnp.float32)))
+            seen = {id(self.eng.plan)} if self.eng.mode == "plan" else set()
+            for plan in self.plans.values():
+                if id(plan) in seen:
+                    continue
+                seen.add(id(plan))
+                sample_plan(call_masked, self.eng.schedule, shape,
+                            jax.random.PRNGKey(0), plan,
+                            clip_value=self.eng.clip_value,
+                            x_init=(None if aot
+                                    else jnp.zeros(shape, jnp.float32)),
+                            program_cache=self.engine.program,
+                            compile_only=aot)
+            for nts in sorted(nts_set):
+                ts = np.arange(nts, dtype=np.int32)[::-1].copy()
+                ts = ts * 0 + 1              # any valid grid; compile only
+                fn = self._gauss_program(b, nts)
+                jax.block_until_ready(
+                    fn(jnp.zeros(shape, jnp.float32),
+                       jnp.asarray(ts, jnp.int32), np.int32(0), np.int32(1)))
+        self._warm = True
+        self._builds_warm = self.engine._builds
+        stats["runtime_warmup_s"] = time.time() - t0
+        stats["programs_total"] = len(self.engine._programs)
+        return stats
+
+    # -- admission ------------------------------------------------------------
+    def submit(self, req: Request) -> Ticket:
+        """Validate + enqueue; raises ``ValueError`` (bad request) or
+        ``QueueFullError`` (admission control) instead of accepting
+        work it cannot serve."""
+        validate_request(req, self.max_images)
+        with self._lock:
+            if len(self._queue) >= self.cfg.max_queue:
+                raise QueueFullError(
+                    f"queue at capacity ({self.cfg.max_queue}); retry "
+                    f"after the backlog drains")
+            now = self.cfg.clock()
+            dl = req.deadline_s if req.deadline_s is not None \
+                else self.cfg.default_deadline_s
+            t = Ticket(request=req, submitted_at=now,
+                       expiry=None if dl is None else now + float(dl))
+            self._queue.append(t)
+            self.counters["submitted"] += 1
+            return t
+
+    def _expire_queued(self, now: float) -> None:
+        keep = []
+        for t in self._queue:
+            if t.expiry is not None and now > t.expiry:
+                t.status = "expired"
+                self.counters["expired"] += 1
+            else:
+                keep.append(t)
+        self._queue = keep
+
+    def _pick_rung(self, now: float) -> tuple[str, str, object, int]:
+        """(mode, plan_name, plan, admission cap) for a new wave, by
+        breaker state.  Precedence: recompile storms force scan mode
+        (fewest cache lookups); OOM halves admission and steps; a
+        tripped screen guard forces exact routing."""
+        cap = self.eng.max_batch
+        if self.eng.mode == "scan" or self.br_compile.is_open(now):
+            return "scan", "scan", None, cap
+        oom = self.br_oom.is_open(now)
+        if oom:
+            cap = max(1, self.eng.max_batch // 2)
+        base = "short" if oom else "primary"
+        if self.br_screen.is_open(now):
+            base = {"primary": "exact", "short": "short_exact"}[base]
+        return "plan", base, self.plans[base], cap
+
+    def _admit(self, now: float) -> None:
+        while self._queue and len(self._waves) < self.cfg.max_inflight_waves:
+            mode, name, plan, cap = self._pick_rung(now)
+            parts: list = []
+            used = 0
+            while self._queue and \
+                    used + self._queue[0].request.num_images <= cap:
+                t = self._queue.pop(0)
+                t.status = "running"
+                parts.append((t, t.request.num_images))
+                used += t.request.num_images
+            if not parts:
+                return                   # head request exceeds current cap
+            bucket = self.eng._bucket_for(used)
+            keys = self.eng._row_keys(
+                [(t.request, 0, n) for t, n in parts], bucket)
+            x = np.asarray(jax.block_until_ready(
+                self.eng._init_noise(keys)), np.float32)
+            wave = _Wave(seq=self._seq, mode=mode, plan_name=name,
+                         plan=plan, bucket=bucket, x=x, parts=parts,
+                         degraded=(name not in ("primary",)
+                                   and self.eng.mode != "scan"))
+            self._seq += 1
+            if name == "scan" and self.eng.mode != "scan":
+                self.counters["scan_waves"] += 1
+            elif name in ("exact", "short_exact"):
+                self.counters["exact_waves"] += 1
+            if name in ("short", "short_exact"):
+                self.counters["short_waves"] += 1
+            self._waves.append(wave)
+
+    def _pick_wave(self, now: float) -> _Wave | None:
+        """Earliest-deadline-first over waves, FIFO on ties."""
+        cands = [w for w in self._waves if not w.running]
+        if not cands:
+            return None
+
+        def urgency(w: _Wave):
+            exps = [t.expiry for t, _ in w.parts if t.expiry is not None]
+            return (min(exps) if exps else float("inf"), w.seq)
+
+        return min(cands, key=urgency)
+
+    # -- segment execution (outside the lock) ---------------------------------
+    def _segment_fn(self, wave: _Wave):
+        if wave.mode == "scan":
+            return self.eng._scan_program((wave.bucket, self.eng.store.dim))
+        plan, b = wave.plan, wave.plan.buckets[wave.cursor]
+        clip = self.eng.clip_value
+        key = plan_segment_key(plan, b, (wave.bucket, self.eng.store.dim),
+                               "float32", clip)
+        return self.engine.program(key, lambda: jax.jit(plan_segment(
+            self.eng.denoiser.call_masked, self.eng.schedule, plan, b,
+            clip)))
+
+    def _backoff(self, attempt: int) -> None:
+        self._retry_seq += 1
+        u = unit_uniform(self.cfg.seed, self._retry_seq, _SALT_JITTER)
+        d = min(self.cfg.backoff_max_s,
+                self.cfg.backoff_base_s * (2.0 ** (attempt - 1)))
+        self.cfg.sleep(max(0.0, d * (1.0 + self.cfg.jitter_frac
+                                     * (2.0 * u - 1.0))))
+
+    @staticmethod
+    def _is_oom(msg: str) -> bool:
+        m = msg.lower()
+        return "resource_exhausted" in m or "out of memory" in m \
+            or "out-of-memory" in m
+
+    def _run_segment(self, wave: _Wave):
+        """Run the wave's current segment with retries, the OOM split
+        escape hatch, and the Gaussian fallback.  Returns
+        ``("ok", new_x)`` or ``("split", None)``."""
+        x_prev = wave.x
+        attempt = 0
+        while True:
+            builds0 = self.engine._builds
+            try:
+                fn = self._segment_fn(wave)
+                out = np.asarray(jax.block_until_ready(
+                    fn(jnp.asarray(x_prev))), np.float32)
+                if self.engine._builds > builds0 and self._warm:
+                    # evict-then-rebuild storms recompile without
+                    # changing the cache size; the build counter sees
+                    # them and arms the scan-mode rung
+                    self.br_compile.record_failure(self.cfg.clock())
+                else:
+                    self.br_compile.record_success(self.cfg.clock())
+                break
+            except RETRYABLE_ERRORS as e:
+                now = self.cfg.clock()
+                if self._is_oom(str(e)):
+                    self.br_oom.record_failure(now)
+                    if wave.bucket > 1:
+                        return "split", None
+                else:
+                    self.br_exec.record_failure(now)
+                attempt += 1
+                self.counters["retries"] += 1
+                wave.retries += 1
+                if attempt > self.cfg.max_retries:
+                    out = self._run_gauss(wave, x_prev)
+                    wave.degraded = True
+                    break
+                self._backoff(attempt)
+        # per-row finite guard: never let NaN/inf cross a seam
+        used = wave.used
+        row_ok = np.isfinite(out[:used]).all(axis=1)
+        if not row_ok.all():
+            nbad = int((~row_ok).sum())
+            self.counters["finite_trips"] += nbad
+            self.br_screen.record_failure(self.cfg.clock())
+            gauss = self._run_gauss(wave, x_prev)
+            bad = np.flatnonzero(~row_ok)
+            out[bad] = gauss[bad]
+            wave.degraded = True
+        else:
+            self.br_screen.record_success(self.cfg.clock())
+            self.br_exec.record_success(self.cfg.clock())
+        return "ok", out
+
+    # -- post-segment bookkeeping (under the lock) ----------------------------
+    def _split(self, wave: _Wave) -> None:
+        """Halve an OOM-ing wave into two waves on warmed smaller
+        buckets, preserving per-ticket row blocks and segment cursor."""
+        self.counters["oom_splits"] += 1
+        half, first, second, acc = wave.used / 2.0, [], [], 0
+        for t, n in wave.parts:
+            (first if acc < half else second).append((t, n))
+            acc += n
+        if not second:                   # single ticket: move it wholesale
+            second = [first.pop()]
+        self._waves.remove(wave)
+        ofs = 0
+        for parts in (first, second):
+            if not parts:
+                continue
+            used = sum(n for _, n in parts)
+            bucket = self.eng._bucket_for(used)
+            x = np.zeros((bucket, wave.x.shape[1]), np.float32)
+            x[:used] = wave.x[ofs: ofs + used]
+            ofs += used
+            self._waves.append(_Wave(
+                seq=self._seq, mode=wave.mode, plan_name=wave.plan_name,
+                plan=wave.plan, bucket=bucket, x=x, parts=parts,
+                cursor=wave.cursor, retries=wave.retries, degraded=True))
+            self._seq += 1
+
+    def _deliver(self, wave: _Wave, now: float) -> None:
+        shape = self.eng.store.image_shape
+        ofs = 0
+        for t, n in wave.parts:
+            rows = wave.x[ofs: ofs + n]
+            ofs += n
+            if t.expiry is not None and now > t.expiry:
+                t.status = "expired"     # strict: late even at the end
+                self.counters["expired"] += 1
+                continue
+            if not np.isfinite(rows).all():     # unreachable by design;
+                t.status = "failed"             # belt over the suspenders
+                self.counters["failed"] += 1
+                continue
+            t.images = rows.reshape((n,) + tuple(shape)).copy()
+            t.latency_s = now - t.submitted_at
+            t.degraded = t.degraded or wave.degraded
+            t.status = "done"
+            self.counters["completed"] += 1
+            self._latencies.append(t.latency_s)
+        self._waves.remove(wave)
+
+    def _post_segment(self, wave: _Wave, result) -> None:
+        status, out = result
+        now = self.cfg.clock()
+        if status == "split":
+            self._split(wave)
+            return
+        wave.x = out
+        wave.cursor += 1
+        if wave.cursor >= wave.num_segments():
+            self._deliver(wave, now)
+            return
+        self._compact_expired(wave, now)
+
+    def _compact_expired(self, wave: _Wave, now: float) -> bool:
+        """Bucket-seam deadline enforcement: expire deadlined tickets,
+        compact survivors to the prefix, repack to a smaller warmed
+        bucket when possible.  Returns True if the whole wave died."""
+        alive, dead_rows, ofs = [], [], 0
+        for t, n in wave.parts:
+            if t.expiry is not None and now > t.expiry:
+                t.status = "expired"
+                self.counters["expired"] += 1
+                dead_rows.append((ofs, n))
+            else:
+                alive.append((t, n))
+            ofs += n
+        if dead_rows:
+            if not alive:
+                self._waves.remove(wave)
+                return True
+            keep = np.ones(wave.used, bool)
+            for o, n in dead_rows:
+                keep[o: o + n] = False
+            used = int(keep.sum())
+            bucket = self.eng._bucket_for(used)
+            x = np.zeros((bucket, wave.x.shape[1]), np.float32)
+            x[:used] = wave.x[: len(keep)][keep]
+            if bucket < wave.bucket:
+                self.counters["repacks"] += 1
+            wave.x, wave.bucket, wave.parts = x, bucket, alive
+        return False
+
+    # -- scheduler loop -------------------------------------------------------
+    def pump(self) -> bool:
+        """One scheduler step.  Returns True if a segment ran."""
+        with self._lock:
+            now = self.cfg.clock()
+            self._expire_queued(now)
+            self._admit(now)
+            wave = self._pick_wave(now)
+            # pre-segment seam: rows already past their deadline are
+            # dropped before any compute is spent on them
+            while wave is not None and self._compact_expired(wave, now):
+                wave = self._pick_wave(now)
+            if wave is None:
+                return False
+            wave.running = True
+        try:
+            result = self._run_segment(wave)
+        finally:
+            with self._lock:
+                wave.running = False
+        with self._lock:
+            self._post_segment(wave, result)
+        return True
+
+    def run_until_idle(self, max_iters: int = 100_000) -> None:
+        """Drain the queue and all in-flight waves inline."""
+        for _ in range(max_iters):
+            if not self.pump():
+                with self._lock:
+                    if not self._queue and not self._waves:
+                        return
+                # stalled but not idle: the head request exceeds a
+                # degraded admission cap — wait out the breaker cooldown
+                # instead of spinning through the iteration budget
+                self.cfg.sleep(self.cfg.idle_sleep_s)
+        raise RuntimeError(f"runtime did not go idle in {max_iters} "
+                           f"pump iterations")
+
+    def start(self) -> None:
+        if self._thread is not None:
+            return
+        self._stop.clear()
+
+        def loop():
+            while not self._stop.is_set():
+                if not self.pump():
+                    self._stop.wait(self.cfg.idle_sleep_s)
+
+        self._thread = threading.Thread(target=loop, daemon=True,
+                                        name="serve-runtime")
+        self._thread.start()
+
+    def stop(self) -> None:
+        if self._thread is None:
+            return
+        self._stop.set()
+        self._thread.join()
+        self._thread = None
+
+    # -- observability --------------------------------------------------------
+    def health(self) -> dict:
+        with self._lock:
+            now = self.cfg.clock()
+            lat = np.asarray(self._latencies, np.float64)
+            finished = (self.counters["completed"]
+                        + self.counters["expired"] + self.counters["failed"])
+            return {
+                "queue_depth": len(self._queue),
+                "inflight_waves": len(self._waves),
+                "breaker_exec": self.br_exec.state(now),
+                "breaker_screen": self.br_screen.state(now),
+                "breaker_oom": self.br_oom.state(now),
+                "breaker_compile": self.br_compile.state(now),
+                "degraded_scan_mode": (self.eng.mode == "plan"
+                                       and self.br_compile.is_open(now)),
+                "degraded_exact_screen": self.br_screen.is_open(now),
+                "degraded_reduced_batch": self.br_oom.is_open(now),
+                "compiles_post_warmup": (self.engine._builds
+                                         - self._builds_warm
+                                         if self._warm else 0),
+                "p50_ms": float(np.percentile(lat, 50) * 1e3)
+                if lat.size else 0.0,
+                "p99_ms": float(np.percentile(lat, 99) * 1e3)
+                if lat.size else 0.0,
+                "deadline_miss_rate": (self.counters["expired"] / finished
+                                       if finished else 0.0),
+                **{f"n_{k}": v for k, v in self.counters.items()},
+            }

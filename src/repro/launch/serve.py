@@ -64,6 +64,10 @@ class Request:
     num_images: int
     seed: int
     class_id: int | None = None
+    # per-request deadline (seconds from submission), honored by the
+    # fault-tolerant runtime (launch/runtime.py); ``ServeEngine.serve``
+    # itself is a synchronous batch call and ignores it
+    deadline_s: float | None = None
 
 
 @dataclasses.dataclass

@@ -109,6 +109,37 @@ def test_cli_exit_codes(tmp_path):
     assert r.returncode == 0, r.stdout + r.stderr
 
 
+def test_completion_floor(tmp_path):
+    """completion/ cells gate at exactly 1.0: the serving runtime must
+    finish 100% of admitted requests in every fault regime."""
+    good = _write(tmp_path, "BENCH_c.json",
+                  {"completion/resilience/nan_storm": 1.0,
+                   "completion/resilience/none": 1})
+    assert check_bench.check_file(good, 1.0) == []
+    p = _write(tmp_path, "BENCH_c2.json",
+               {"completion/resilience/nan_storm": 0.9,
+                "completion/resilience/oom": 1.3})
+    fails = check_bench.check_file(p, 1.0)
+    assert len(fails) == 2
+    assert any("completion floor" in f and "nan_storm" in f for f in fails)
+    assert any("outside [0, 1]" in f and "oom" in f for f in fails)
+
+
+def test_p99_budget_pair(tmp_path):
+    """p99_budget_us -> p99_us is a 1.0x budget pair: delivered p99 must
+    stay within the declared deadline budget."""
+    ok = _write(tmp_path, "BENCH_d.json",
+                {"resilience/nan_storm/p99_budget_us": 1.2e8,
+                 "resilience/nan_storm/p99_us": 0.9e8})
+    assert check_bench.check_file(ok, 1.0) == []
+    over = _write(tmp_path, "BENCH_d2.json",
+                  {"resilience/nan_storm/p99_budget_us": 1.2e8,
+                   "resilience/nan_storm/p99_us": 1.3e8})
+    fails = check_bench.check_file(over, 1.0)
+    assert len(fails) == 1 and "exceeds" in fails[0] \
+        and "p99_us" in fails[0]
+
+
 def test_budget_pair_gates_plan_flops(tmp_path):
     """static_flops -> plan_flops is a budget pair: the plan may pay
     MORE FLOPs than static, but only up to 1.2x."""

@@ -1,0 +1,166 @@
+"""Fault-injection harness (repro/launch/faults.py): the faults must be
+deterministic under a fixed seed, must actually reach the engine's
+dispatch seam, and must be a provable no-op when disabled."""
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import GoldDiffEngine, make_schedule
+from repro.data import gmm
+from repro.kernels import ops
+from repro.launch import faults
+from repro.launch.faults import (DEFAULT_TARGETS, RETRYABLE_ERRORS,
+                                 FaultConfig, FaultInjector, XlaRuntimeError,
+                                 injected, unit_uniform)
+
+SCH = make_schedule("ddpm_linear", 1000)
+
+
+def _engine():
+    return GoldDiffEngine(gmm(256, dim=8, seed=0), SCH)
+
+
+@pytest.fixture(autouse=True)
+def _no_hook_leak():
+    yield
+    assert ops.dispatch_hook() is None, "a test leaked an installed hook"
+
+
+def test_unit_uniform_deterministic_and_in_range():
+    a = [unit_uniform(7, n, 3) for n in range(64)]
+    assert a == [unit_uniform(7, n, 3) for n in range(64)]
+    assert all(0.0 <= u < 1.0 for u in a)
+    # seed, counter and salt all perturb the stream
+    assert unit_uniform(7, 0, 3) != unit_uniform(8, 0, 3)
+    assert unit_uniform(7, 0, 3) != unit_uniform(7, 1, 3)
+    assert unit_uniform(7, 0, 3) != unit_uniform(7, 0, 4)
+
+
+def test_disabled_is_identity():
+    """No injector installed: engine.program returns the RAW cached
+    callable — not a wrapper — and outputs are unchanged."""
+    eng = _engine()
+    x = jnp.zeros((2, 8))
+    ref_out = np.asarray(eng.denoise(x, 500))
+    assert len(eng._programs) > 0
+    for k, fn in list(eng._programs.items()):
+        assert eng.program(k, lambda: None) is fn       # raw, unwrapped
+    np.testing.assert_array_equal(np.asarray(eng.denoise(x, 500)), ref_out)
+
+
+def test_zero_rate_injector_is_behavioral_noop():
+    """Installed but all rates 0: no events, no evictions, no output
+    change, and the cache still stores unwrapped callables."""
+    eng = _engine()
+    x = jnp.ones((2, 8))
+    clean = np.asarray(eng.denoise(x, 400))
+    n_prog = len(eng._programs)
+    with injected(FaultConfig(seed=1)) as inj:
+        out = np.asarray(eng.denoise(x, 400))
+    np.testing.assert_array_equal(out, clean)
+    assert inj.events == []
+    assert inj.dispatches == 1 and inj.lookups == 1
+    assert len(eng._programs) == n_prog
+    assert eng._builds == n_prog
+
+
+def test_faults_reach_dispatch_seam_and_are_deterministic():
+    """Same seed + same call sequence => identical event log, firing at
+    the real engine.program seam (kind recorded from the key)."""
+    cfg = FaultConfig(seed=42, nan_rate=0.5)
+
+    def workload():
+        eng = _engine()
+        x = jnp.ones((4, 8))
+        outs = []
+        with injected(cfg) as inj:
+            for t in (900, 600, 300, 100):
+                outs.append(np.asarray(eng.denoise(x, t)))
+        return inj.events, outs
+
+    ev1, out1 = workload()
+    ev2, out2 = workload()
+    assert ev1 == ev2
+    assert len(ev1) >= 1 and all(e[0] == "nan" and e[1] == "denoise"
+                                 for e in ev1)
+    # the corrupted dispatches produced exactly one NaN row each
+    for o1, o2 in zip(out1, out2):
+        np.testing.assert_array_equal(o1, o2)
+    n_nan_rows = sum(int(np.isnan(o).any(axis=1).sum()) for o in out1)
+    assert n_nan_rows == len(ev1)
+
+
+def test_error_and_oom_raise_retryable():
+    eng = _engine()
+    x = jnp.zeros((2, 8))
+    with injected(FaultConfig(seed=0, error_rate=1.0)):
+        with pytest.raises(RETRYABLE_ERRORS, match="transient"):
+            eng.denoise(x, 500)
+    with injected(FaultConfig(seed=0, oom_rate=1.0)):
+        with pytest.raises(XlaRuntimeError, match="RESOURCE_EXHAUSTED"):
+            eng.denoise(x, 500)
+    # a fresh dispatch draws a fresh decision: rate < 1 clears on retry
+    cfg = FaultConfig(seed=9, error_rate=0.5)
+    with injected(cfg) as inj:
+        done = False
+        for _ in range(32):
+            try:
+                eng.denoise(x, 500)
+                done = True
+                break
+            except RETRYABLE_ERRORS:
+                continue
+        assert done and any(e[0] == "error" for e in inj.events)
+
+
+def test_latency_injection_sleeps():
+    eng = _engine()
+    x = jnp.zeros((2, 8))
+    eng.denoise(x, 500)                       # compile outside the clock
+    with injected(FaultConfig(seed=0, latency_rate=1.0, latency_s=0.05)):
+        t0 = time.perf_counter()
+        eng.denoise(x, 500)
+        assert time.perf_counter() - t0 >= 0.05
+
+
+def test_evict_forces_real_recompile():
+    eng = _engine()
+    x = jnp.zeros((2, 8))
+    eng.denoise(x, 500)
+    b0 = eng._builds
+    with injected(FaultConfig(seed=0, evict_rate=1.0)) as inj:
+        out = np.asarray(eng.denoise(x, 500))
+    assert eng._builds == b0 + 1              # rebuilt, cache size unchanged
+    assert any(e[0] == "evict" for e in inj.events)
+    assert np.isfinite(out).all()
+
+
+def test_target_kinds_filtering():
+    """Kinds outside target_kinds are untouched even at rate 1.0 —
+    the runtime's init-noise and Gaussian-fallback programs rely on
+    this."""
+    inj = FaultInjector(FaultConfig(seed=0, nan_rate=1.0, evict_rate=1.0))
+    assert inj._targets(("plan_seg", 0, 3))
+    assert inj._targets(("serve_scan", (4, 16)))
+    for k in (("serve_keys", 4), ("serve_init", 4, 16),
+              ("gauss_seg", 4, 16, 7, 3.0), ("select", 1), "not-a-tuple"):
+        assert not inj._targets(k)
+    assert "gauss_seg" not in DEFAULT_TARGETS
+    eng = _engine()
+    x = jnp.zeros((2, 8))
+    with injected(FaultConfig(seed=0, error_rate=1.0,
+                              target_kinds=("full_scan",))):
+        out = np.asarray(eng.denoise(x, 500))  # "denoise" not targeted
+        assert np.isfinite(out).all()
+        with pytest.raises(RETRYABLE_ERRORS):
+            eng.full_scan(x, 500)
+
+
+def test_install_uninstall_active():
+    assert faults.active() is None
+    inj = faults.install(FaultConfig(seed=1))
+    assert faults.active() is inj
+    faults.uninstall()
+    assert faults.active() is None
