@@ -13,6 +13,8 @@ real trained conv-denoiser oracle for cross-checking.
 """
 from __future__ import annotations
 
+import json
+import os
 import resource
 import time
 
@@ -38,6 +40,33 @@ def time_call(fn, *args, repeats: int = 3, warmup: int = 1) -> float:
 
 def peak_rss_gb() -> float:
     return resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1e6
+
+
+def merge_bench_json(path: str, cells: dict) -> None:
+    """Merge ``cells`` into a flat BENCH_*.json record.
+
+    Ownership is by the first ``/``-segment of the cell name: existing
+    cells whose first segment appears in ``cells`` are replaced (stale
+    cells from this writer's previous run die), every other segment is
+    preserved verbatim.  This lets several benchmark tables share one
+    record — e.g. ``engine_speedup`` (``static/...``) and ``roofline``
+    (``roofline/...``, ``obs/...``) both write BENCH_engine.json
+    without truncating each other's cells.
+    """
+    owned = {name.split("/", 1)[0] for name in cells}
+    record: dict = {}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                prev = json.load(f)
+            if isinstance(prev, dict):
+                record = {k: v for k, v in prev.items()
+                          if k.split("/", 1)[0] not in owned}
+        except (OSError, json.JSONDecodeError):
+            record = {}                  # corrupt record: rewrite fresh
+    record.update(cells)
+    with open(path, "w") as f:
+        json.dump(record, f, indent=2, sort_keys=True)
 
 
 def make_oracle(dataset_fn, n_oracle: int, schedule: Schedule, seed: int = 777):

@@ -18,13 +18,11 @@ trajectory is tracked across PRs:
 """
 from __future__ import annotations
 
-import json
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import time_call
+from benchmarks.common import merge_bench_json, time_call
 from repro.core import (GoldDiff, GoldDiffConfig, OptimalDenoiser,
                         make_schedule)
 from repro.core import streaming
@@ -206,18 +204,19 @@ def run(fast: bool = True):
 
 def write_bench_json(rows, path: str = BENCH_JSON) -> None:
     """Machine-readable perf record (name -> us_per_call) for cross-PR
-    tracking; called by benchmarks.run after this table executes."""
-    record = {}
+    tracking; called by benchmarks.run after this table executes.
+    Merge semantics: this table's cells are replaced, other tables'
+    cells in the same record (``roofline/...``, ``obs/...``) survive."""
+    cells = {}
     for r in rows:
         # N in the key: fast (N=4096) and --full (N=16384) runs must not
         # overwrite each other in the cross-PR record
         name = f"{r['kind']}/{r['method']}/N{r['N']}/t{r['t']}"
-        record[name] = round(r["time_per_step_s"] * 1e6, 1)
+        cells[name] = round(r["time_per_step_s"] * 1e6, 1)
         if "bf16_relerr_vs_fp32" in r:
-            record[f"{name}/bf16_relerr_vs_fp32"] = \
+            cells[f"{name}/bf16_relerr_vs_fp32"] = \
                 round(r["bf16_relerr_vs_fp32"], 6)
-    with open(path, "w") as f:
-        json.dump(record, f, indent=2, sort_keys=True)
+    merge_bench_json(path, cells)
 
 
 def main():

@@ -19,6 +19,8 @@ import time
 import numpy as np
 
 from repro.launch.serve import Request, ServeEngine
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 
 
 def main():
@@ -34,8 +36,21 @@ def main():
                     help="cap the number of shape buckets (compiled "
                          "programs per batch shape; floor: one per "
                          "indexed/exact routing region)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="enable tracing and dump the event log as JSONL "
+                         "to PATH on exit")
+    ap.add_argument("--metrics", action="store_true",
+                    help="count dispatches/compiles and print a "
+                         "Prometheus text snapshot on exit")
     args = ap.parse_args()
     n, batch = args.n, args.batch
+
+    tracer = (obs_trace.Tracer(capacity=1 << 16) if args.trace_out
+              else obs_trace.NULL_TRACER)
+    if args.trace_out or args.metrics:
+        obs_trace.set_tracer(tracer)
+        obs_trace.install_dispatch_tracing(
+            tracer, obs_metrics.REGISTRY if args.metrics else None)
     reqs = [Request(i, num_images=4, seed=100 + i) for i in range(4)]
 
     print(f"== GoldDiff engine (N={n}) ==")
@@ -76,6 +91,12 @@ def main():
     n_img2 = sum(r.images.shape[0] for r in res2)
     print(f"  {n_img2} images in {t_full:.2f}s ({t_full/n_img2:.3f}s/img)")
     print(f"== speedup: {t_full / t_gold:.1f}x ==")
+    if args.trace_out:
+        tracer.dump(args.trace_out)
+        print(f"trace: {len(tracer.events())} events "
+              f"({tracer.dropped} dropped) -> {args.trace_out}")
+    if args.metrics:
+        print(obs_metrics.REGISTRY.prometheus(), end="")
 
 
 if __name__ == "__main__":

@@ -14,7 +14,11 @@ For each pair the speedup baseline/subject must stay >= the threshold
 baseline), and every recall cell must stay >= 0.95.  *Budget* pairs
 (``BUDGET_PAIRS``) run the other way: the subject may exceed its
 baseline, but only by the listed factor — e.g. the trajectory plan's
-padded FLOPs (BENCH_serve.json) must stay <= 1.2x static mode's.  Run
+padded FLOPs (BENCH_serve.json) must stay <= 1.2x static mode's, and
+traced warm steps (``obs/.../obs_traced_us``) must stay <= 1.03x the
+untraced baseline.  ``roofline/...`` cells are validated separately:
+achieved GFLOP/s / GB/s must never exceed the measured machine peaks
+and all four core stages must be present (``check_roofline``).  Run
 it from the repo root:
 
   PYTHONPATH=src python scripts/check_bench.py [--threshold 1.0] [--dir .]
@@ -46,6 +50,11 @@ BUDGET_PAIRS = {
     # "completed" imply "within deadline", so p99 <= deadline holds
     # structurally (BENCH_resilience.json) — gate it at exactly 1.0x
     "p99_budget_us": ("p99_us", 1.0),
+    # tracing must be effectively free: a warm engine step with the
+    # tracer ENABLED (obs/.../obs_traced_us) may cost at most 3% over
+    # the same step with tracing off (benchmarks/roofline.py emits the
+    # pair into BENCH_engine.json)
+    "obs_base_us": ("obs_traced_us", 1.03),
 }
 RECALL_MIN = 0.95
 # completion/ cells are delivered/admitted fractions under fault
@@ -55,6 +64,51 @@ COMPLETION_MIN = 1.0
 # parity/ cells are exactness fractions (e.g. streamed-vs-materialized
 # top-m candidate sets), much tighter than recall: identical up to ties
 PARITY_MIN = 0.999
+# roofline/ validation: every achieved cell must stay at or below the
+# measured machine peak (the analytic traffic model is optimistic, so
+# achieved > peak means the cost model or the timer is lying), and the
+# record must cover all four core pipeline stages
+ROOFLINE_STAGES = ("screen", "rerank", "aggregate", "full_scan")
+
+
+def check_roofline(path: str, record: dict) -> list[str]:
+    """Validate ``roofline/...`` cells (no-op when none are present)."""
+    cells = {k: v for k, v in record.items() if k.startswith("roofline/")}
+    if not cells:
+        return []
+    peaks = {"achieved_gflops": record.get("roofline/peak/peak_gflops"),
+             "achieved_gbps": record.get("roofline/peak/peak_gbps")}
+    failures = []
+    for metric, peak in sorted(peaks.items()):
+        if peak is None:
+            failures.append(f"{path}: roofline cells present but "
+                            f"roofline/peak/peak_{metric.split('_')[1]} "
+                            f"is missing")
+        elif peak <= 0:
+            failures.append(f"{path}: roofline peak for {metric} is "
+                            f"non-positive ({peak})")
+    stages_seen = set()
+    for name, value in sorted(cells.items()):
+        parts = name.split("/")
+        metric = parts[-1]
+        if metric not in peaks:
+            continue                     # the peak cells themselves
+        stages_seen.add(parts[-2])
+        if value <= 0:
+            failures.append(f"{path}: {name} = {value} (achieved "
+                            f"throughput must be positive)")
+            continue
+        peak = peaks[metric]
+        if peak is not None and peak > 0 and value > peak:
+            failures.append(f"{path}: {name} = {value:.4g} exceeds the "
+                            f"measured peak {peak:.4g} "
+                            f"({value / peak:.2f}x) — cost model or "
+                            f"timer is inconsistent")
+    missing = [s for s in ROOFLINE_STAGES if s not in stages_seen]
+    if missing:
+        failures.append(f"{path}: roofline record is missing required "
+                        f"stage cell(s): {', '.join(missing)}")
+    return failures
 
 
 def check_file(path: str, threshold: float) -> list[str]:
@@ -83,8 +137,10 @@ def check_file(path: str, threshold: float) -> list[str]:
     if bad:
         return [f"{path}: non-numeric cell(s): {', '.join(bad[:5])}"
                 + (f" (+{len(bad) - 5} more)" if len(bad) > 5 else "")]
-    failures = []
+    failures = check_roofline(path, record)
     for name, value in sorted(record.items()):
+        if name.startswith("roofline/"):
+            continue                     # gated by check_roofline above
         if name.startswith("recall/"):
             if not 0.0 <= value <= 1.0:
                 failures.append(f"{path}: {name} = {value} outside [0, 1] "

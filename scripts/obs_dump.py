@@ -1,0 +1,97 @@
+#!/usr/bin/env python
+"""Produce observability artifacts from a small traced serve workload.
+
+Stands up an indexed plan-mode ``ServeEngine`` + ``ServeRuntime`` with
+tracing, dispatch metrics, and the online ``QualityMonitor`` all
+enabled, serves a handful of requests, and writes:
+
+  <out>/trace.jsonl    — the unified span/event log (one JSON per line)
+  <out>/metrics.json   — MetricsRegistry snapshot (typed cells)
+  <out>/metrics.prom   — the same registry in Prometheus text format
+  <out>/health.json    — ``ServeRuntime.health()`` (includes the
+                         recall-proxy / concentration summary)
+
+CI's tier-2 job uploads the directory, so every perf run carries a
+browsable trace + metrics record next to its BENCH_*.json cells:
+
+  PYTHONPATH=src python scripts/obs_dump.py --out artifacts/obs
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.data import make_dataset                       # noqa: E402
+from repro.index import build_index                       # noqa: E402
+from repro.launch.runtime import (RuntimeConfig,          # noqa: E402
+                                  ServeRuntime)
+from repro.launch.serve import Request, ServeEngine       # noqa: E402
+from repro.obs import QualityMonitor                      # noqa: E402
+from repro.obs import metrics as obs_metrics              # noqa: E402
+from repro.obs import trace as obs_trace                  # noqa: E402
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="artifacts/obs",
+                    help="output directory for the artifact files")
+    ap.add_argument("--n", type=int, default=1024)
+    ap.add_argument("--steps", type=int, default=6)
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--requests", type=int, default=4)
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    store = make_dataset("cifar_like", n=args.n)
+    ix = build_index(store, num_clusters=32)
+    eng = ServeEngine("cifar_like", {"n": args.n}, base="optimal",
+                      num_steps=args.steps, max_batch=args.batch,
+                      mode="plan", index=ix, index_mode="always")
+    registry = obs_metrics.MetricsRegistry()
+    monitor = QualityMonitor(eng.engine, registry=registry,
+                             sample_rate=1.0)
+    rt = ServeRuntime(eng, RuntimeConfig(max_queue=64), monitor=monitor)
+
+    tracer = obs_trace.Tracer(capacity=1 << 16)
+    obs_trace.set_tracer(tracer)
+    hook = obs_trace.install_dispatch_tracing(tracer, registry)
+    try:
+        stats = rt.warmup()
+        for i in range(args.requests):
+            rt.submit(Request(i, args.batch, seed=100 + i))
+        rt.run_until_idle()
+    finally:
+        obs_trace.uninstall_dispatch_tracing(hook)
+        obs_trace.set_tracer(None)
+
+    health = rt.health()
+    tracer.dump(os.path.join(args.out, "trace.jsonl"))
+    with open(os.path.join(args.out, "metrics.json"), "w") as f:
+        json.dump(rt.metrics_snapshot(), f, indent=2, sort_keys=True)
+    with open(os.path.join(args.out, "metrics.prom"), "w") as f:
+        f.write(rt.prometheus())
+    with open(os.path.join(args.out, "health.json"), "w") as f:
+        json.dump(health, f, indent=2, sort_keys=True)
+
+    n_ev = len(tracer.events())
+    print(f"obs_dump: {n_ev} trace events ({tracer.dropped} dropped), "
+          f"{len(rt.metrics_snapshot())} metrics, "
+          f"compiles_post_warmup={health['compiles_post_warmup']}, "
+          f"recall_p50={health['screen_recall_p50']:.4f}, "
+          f"warmup={stats.get('runtime_warmup_s', 0):.1f}s -> {args.out}")
+    if health["compiles_post_warmup"] != 0:
+        print("obs_dump: FAIL — observability caused post-warmup "
+              "compiles", file=sys.stderr)
+        return 1
+    if n_ev == 0:
+        print("obs_dump: FAIL — empty trace", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

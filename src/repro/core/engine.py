@@ -128,6 +128,7 @@ import numpy as np
 from jax.sharding import PartitionSpec
 
 from repro.core.dataset import DatasetStore, downsample_proxy
+from repro.core.plan import full_scan_costs, step_stage_costs
 from repro.core.schedules import Schedule
 from repro.distributed.sharding import (gather_global_topk, lse_merge_mean,
                                         shard_map_compat)
@@ -135,6 +136,7 @@ from repro.index.schedule import ProbeSchedule
 from repro.index.shard import shard_layout
 from repro.index.store import GoldenIndex
 from repro.kernels import ops, ref
+from repro.obs import trace as obs_trace
 
 Array = jnp.ndarray
 NEG_INF = -1e30
@@ -309,6 +311,7 @@ class GoldDiffEngine:
         # Per-timestep schedule constants, computed host-side exactly once.
         self._consts: dict[int, tuple[float, float]] = {}
         self._sizes: dict[int, tuple[int, int]] = {}
+        self._stage_costs: dict = {}
         self._programs: dict = {}
         # monotonic build counter: the serving runtime diffs it across a
         # segment dispatch to detect post-warmup compiles (a cache-size
@@ -700,6 +703,43 @@ class GoldDiffEngine:
 
         return self._shard_mapped(local)
 
+    # -- observability (spans around host-level dispatches) -------------------
+    def stage_costs(self, kind: str, t: int, batch: int) -> dict:
+        """Cached analytic per-stage FLOPs/bytes (``core.plan``'s
+        accounting) for one entry-point dispatch.  ``select`` drops the
+        aggregate stage (it stops at the golden support)."""
+        key = (kind, int(t), int(batch))
+        if key not in self._stage_costs:
+            if kind == "full_scan":
+                costs = full_scan_costs(self, batch)
+            else:
+                costs = step_stage_costs(self, t, batch)
+                if kind == "select":
+                    costs = {s: c for s, c in costs.items()
+                             if s != "aggregate"}
+            self._stage_costs[key] = costs
+        return self._stage_costs[key]
+
+    def _traced(self, kind: str, t: int, x_t: Array, fn, compiled: bool):
+        """Run ``fn(x_t)`` inside an ``engine.<kind>`` span.
+
+        Only reached when the current tracer is enabled (callers branch
+        on ``tracer().enabled`` first, so the disabled path stays
+        bit-identical with zero extra work).  Stage point events carry
+        the analytic FLOPs/bytes tags; the dispatch blocks inside the
+        span so the recorded duration is wall-clock, not enqueue time.
+        """
+        tr = obs_trace.tracer()
+        with tr.span(f"engine.{kind}", t=int(t), backend=self.backend,
+                     shape=tuple(x_t.shape), compile=bool(compiled),
+                     indexed=bool(self.use_index(t))):
+            for stage, c in self.stage_costs(kind, t, x_t.shape[0]).items():
+                tr.event(f"stage.{stage}", t=int(t), flops=c["flops"],
+                         bytes=c["bytes"])
+            out = fn(x_t)
+            jax.block_until_ready(out)
+        return out
+
     # -- public entry points -------------------------------------------------
     def select(self, x_t: Array, t: int, jit: bool = True) -> Array:
         """Golden support S_t for each query; [B, k_t] (static shapes).
@@ -715,9 +755,12 @@ class GoldDiffEngine:
             body = lambda: lambda x: self._select_ids_body(x / a, t)
         if not jit:
             return body()(x_t)
+        b0 = self._builds
         fn = self.program(self._key("select", t, x_t, self._index_sig(t)),
                           lambda: jax.jit(body()))
-        return fn(x_t)
+        if not obs_trace.tracer().enabled:
+            return fn(x_t)
+        return self._traced("select", t, x_t, fn, self._builds > b0)
 
     def denoise(self, x_t: Array, t: int, jit: bool = True) -> Array:
         """Full GoldDiff step for the Optimal base (unbiased SS on S_t)."""
@@ -728,9 +771,12 @@ class GoldDiffEngine:
             body = lambda: lambda x: self._denoise_body(x, t)
         if not jit:
             return body()(x_t)
+        b0 = self._builds
         fn = self.program(self._key("denoise", t, x_t, self._index_sig(t)),
                           lambda: jax.jit(body()))
-        return fn(x_t)
+        if not obs_trace.tracer().enabled:
+            return fn(x_t)
+        return self._traced("denoise", t, x_t, fn, self._builds > b0)
 
     # -- masked (scan/pjit-compatible) path -----------------------------------
     def _masked_nprobe_pad(self) -> int:
@@ -869,6 +915,9 @@ class GoldDiffEngine:
                 tile=self.screen_tile).astype(x_t.dtype)
         if not jit:
             return body(x_t)
+        b0 = self._builds
         fn = self.program(self._key("full_scan", t, x_t),
                           lambda: jax.jit(body))
-        return fn(x_t)
+        if not obs_trace.tracer().enabled:
+            return fn(x_t)
+        return self._traced("full_scan", t, x_t, fn, self._builds > b0)

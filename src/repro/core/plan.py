@@ -48,7 +48,7 @@ import dataclasses
 from repro.core.schedules import sampling_timesteps
 
 __all__ = ["BucketCaps", "PlanBucket", "TrajectoryPlan", "build_plan",
-           "step_shapes"]
+           "step_shapes", "step_stage_costs", "full_scan_costs"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -169,6 +169,83 @@ class TrajectoryPlan:
                 f"{cap} k<={b.caps.k_cap} "
                 f"overhead {100 * b.overhead:.1f}%")
         return "\n".join(lines)
+
+
+def _elem_size(engine) -> int:
+    """Bytes per stored element (bf16 storage halves operand traffic)."""
+    try:
+        return int(engine.X.dtype.itemsize)
+    except AttributeError:               # pragma: no cover - duck-typed
+        return 4
+
+
+def step_stage_costs(engine, t: int, batch: int = 1) -> dict:
+    """Analytic per-stage FLOPs/bytes of one GoldDiff step at static ``t``.
+
+    Returns ``{stage: {"flops": float, "bytes": float}}`` with stages
+    ``screen`` *or* ``ivf_screen`` (by ``engine.use_index(t)``), then
+    ``rerank`` and ``aggregate`` — the operand-traffic/arithmetic model
+    the roofline benchmark and the engine's stage spans share.  The
+    conventions (documented so cells stay comparable across PRs):
+
+    * matmul-form distances count 2*rows*dim FLOPs per query (one
+      multiply-add per element);
+    * bytes are *analytic operand traffic*: stored rows at the storage
+      dtype width, norms/logits/outputs at fp32 — an optimistic
+      read-each-operand-once model, so ``achieved <= peak`` holds with
+      slack on cached re-reads;
+    * the dense (scatter+GEMM) strategy reads the full store per stage,
+      the gather strategy reads only the touched rows (exactly the
+      crossover the engine picks strategies by).
+    """
+    b = float(batch)
+    n = float(engine.store.n)
+    dim = float(engine.store.dim)
+    dp = float(engine.proxy.shape[1])
+    esz = float(_elem_size(engine))
+    m_t, k_t = engine.sizes(t)
+    costs = {}
+    if engine.use_index(t):
+        ix = engine.index
+        c = float(ix.num_clusters)
+        cand = float(engine.nprobe(t) * ix.max_cluster)
+        costs["ivf_screen"] = {
+            # centroid scan GEMM + probed-window proxy distances; like
+            # the exact screen, shared operands (centroids, probed
+            # proxy rows) count ONCE per batch — the read-each-operand-
+            # once convention — while per-query outputs scale with b
+            "flops": 2.0 * b * c * dp + 2.0 * b * cand * dp,
+            "bytes": c * dp * 4.0 + min(n, cand) * dp * esz
+            + b * cand * 8.0 + b * dp * 4.0}
+    else:
+        cand = float(m_t)
+        out_b = (b * n * 4.0
+                 if not engine.use_stream(int(batch)) else b * m_t * 8.0)
+        costs["screen"] = {"flops": 2.0 * b * n * dp,
+                           "bytes": n * dp * esz + b * dp * 4.0 + out_b}
+    if engine.strategy_for(t) == "dense":
+        costs["rerank"] = {"flops": 2.0 * b * n * dim,
+                           "bytes": n * dim * esz + b * n * 4.0}
+        costs["aggregate"] = {"flops": 2.0 * b * n * dim,
+                              "bytes": n * dim * esz + b * n * 4.0}
+    else:
+        costs["rerank"] = {"flops": 2.0 * b * cand * dim,
+                           "bytes": b * cand * (dim * esz + 8.0)}
+        costs["aggregate"] = {"flops": 2.0 * b * k_t * dim,
+                              "bytes": b * k_t * (dim * esz + 4.0)}
+    return costs
+
+
+def full_scan_costs(engine, batch: int = 1) -> dict:
+    """Analytic FLOPs/bytes of the exact posterior mean (Eq. 2)."""
+    b = float(batch)
+    n = float(engine.store.n)
+    dim = float(engine.store.dim)
+    esz = float(_elem_size(engine))
+    # distance GEMM + softmax-weighted aggregation GEMM over all N rows
+    return {"full_scan": {"flops": 4.0 * b * n * dim,
+                          "bytes": 2.0 * n * dim * esz + b * n * 8.0
+                          + 2.0 * b * dim * 4.0}}
 
 
 def step_shapes(engine, num_steps: int = 10) -> tuple:

@@ -31,6 +31,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.schedules import Schedule, sampling_timesteps
+from repro.obs import trace as obs_trace
 
 Array = jnp.ndarray
 
@@ -191,13 +192,22 @@ def sample_plan(denoise_masked: Callable, schedule: Schedule, shape: tuple,
 
     rng, init = jax.random.split(rng)       # match sample()'s key schedule
     x = _init_noise(schedule, int(plan.ts[0]), shape, init, x_init)
-    for bucket in plan.buckets:
+    tr = obs_trace.tracer()
+    for bi, bucket in enumerate(plan.buckets):
         seg = make_segment(bucket)
         if program_cache is None:
-            x = seg(x)
+            fn = seg
         else:
-            x = program_cache(seg_key(bucket, x.shape, str(x.dtype)),
-                              lambda s=seg: jax.jit(s))(x)
+            fn = program_cache(seg_key(bucket, x.shape, str(x.dtype)),
+                               lambda s=seg: jax.jit(s))
+        if not tr.enabled:
+            x = fn(x)
+            continue
+        with tr.span("plan.segment", bucket=bi, start=bucket.start,
+                     stop=bucket.stop, caps=bucket.caps.sig(),
+                     shape=tuple(x.shape)):
+            x = fn(x)
+            jax.block_until_ready(x)
     return x
 
 

@@ -47,6 +47,7 @@ import jax
 import numpy as np
 
 from repro.kernels import ops
+from repro.obs import trace as obs_trace
 
 try:                                     # jax >= 0.4.14
     from jax.errors import JaxRuntimeError as XlaRuntimeError
@@ -125,6 +126,16 @@ class FaultInjector:
         self.lookups = 0
         self.events: list[tuple] = []
 
+    def _record(self, kind: str, key, n: int) -> None:
+        """Log a fired fault to the legacy tuple list AND the current
+        tracer (``fault.<kind>`` point events on the unified schema —
+        no-ops when tracing is off), so injections appear inline with
+        the dispatch/segment spans they hit."""
+        self.events.append((kind, key[0], n))
+        tr = obs_trace.tracer()
+        if tr.enabled:
+            tr.event(f"fault.{kind}", program=key[0], counter=n)
+
     # -- decision stream -----------------------------------------------------
     def _targets(self, key) -> bool:
         return (isinstance(key, tuple) and len(key) > 0
@@ -144,7 +155,7 @@ class FaultInjector:
         if self._hit(n, "evict", self.config.evict_rate) \
                 and key in engine._programs:
             del engine._programs[key]
-            self.events.append(("evict", key[0], n))
+            self._record("evict", key, n)
 
     def wrap(self, key, fn):
         """Dispatch hook: returns ``fn`` or a fault-wrapped callable."""
@@ -156,21 +167,21 @@ class FaultInjector:
             self.dispatches += 1
             cfg = self.config
             if self._hit(n, "latency", cfg.latency_rate):
-                self.events.append(("latency", key[0], n))
+                self._record("latency", key, n)
                 time.sleep(cfg.latency_s)
             if cfg.shard_drop_rate > 0.0 and len(jax.devices()) > 1 \
                     and self._hit(n, "shard_drop", cfg.shard_drop_rate):
-                self.events.append(("shard_drop", key[0], n))
+                self._record("shard_drop", key, n)
                 raise XlaRuntimeError(
                     "INTERNAL: injected shard dropout: mesh device "
                     "unavailable during collective")
             if self._hit(n, "oom", cfg.oom_rate):
-                self.events.append(("oom", key[0], n))
+                self._record("oom", key, n)
                 raise XlaRuntimeError(
                     "RESOURCE_EXHAUSTED: injected out-of-memory "
                     "allocating temporary buffer")
             if self._hit(n, "error", cfg.error_rate):
-                self.events.append(("error", key[0], n))
+                self._record("error", key, n)
                 raise XlaRuntimeError(
                     "INTERNAL: injected transient executor failure")
             out = fn(*args, **kw)
@@ -189,7 +200,7 @@ class FaultInjector:
         row = int(unit_uniform(self.config.seed, n, _SALT["row"])
                   * a.shape[0]) % a.shape[0]
         a[row] = np.nan
-        self.events.append(("nan", key[0], n))
+        self._record("nan", key, n)
         return a
 
 

@@ -46,8 +46,17 @@ admission / scheduling / failure machinery a service actually needs:
   non-finite are replaced with the Gaussian-fallback segment of the
   same rows (never delivered as NaN; trips the ``screen`` breaker).
 * **observability** — ``health()`` snapshots queue depth, breaker
-  states, degraded flags, counters, p50/p99 latency and the
-  deadline-miss rate; ``benchmarks/serve_resilience.py`` turns the same
+  states (plus cumulative open *dwell time* per breaker), degraded
+  flags, counters, p50/p99 latency (from a bounded reservoir histogram,
+  not an unbounded list) and the deadline-miss rate;
+  ``metrics_snapshot()`` / ``prometheus()`` export the same state plus
+  any attached :class:`repro.obs.QualityMonitor`'s recall/concentration
+  metrics through a ``MetricsRegistry``.  When a tracer is enabled
+  (``repro.obs.trace``), every request lifecycle edge — admit, queue
+  expiry, wave admission, each segment (a span), retries, splits,
+  repacks, Gaussian fallbacks, delivery — lands on the unified event
+  schema, so a request's full history is reconstructable from the
+  trace alone.  ``benchmarks/serve_resilience.py`` turns the same
   numbers into gated BENCH cells.
 
 Single-threaded by design: ``pump()`` runs one scheduler step (admit ->
@@ -73,6 +82,8 @@ from repro.core.sampler import plan_segment, plan_segment_key, sample_plan
 from repro.core.schedules import sampling_timesteps
 from repro.launch.faults import RETRYABLE_ERRORS, unit_uniform
 from repro.launch.serve import Request, ServeEngine
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 
 _SALT_JITTER = 0xB0
 
@@ -131,6 +142,7 @@ class RuntimeConfig:
     max_inflight_waves: int = 2
     seed: int = 0
     idle_sleep_s: float = 0.005
+    latency_reservoir: int = 1024        # bounded p50/p99 sample size
     clock: Callable[[], float] = time.monotonic
     sleep: Callable[[float], None] = time.sleep
 
@@ -163,18 +175,33 @@ class CircuitBreaker:
         self.cooldown_s = cooldown_s
         self.failures: list[float] = []
         self.open_until: float | None = None
+        self._opened_at: float | None = None
+        self._dwell_s = 0.0              # closed episodes' open+half-open time
 
     def record_failure(self, now: float) -> None:
         self.failures.append(now)
         self.failures = [t for t in self.failures
                          if t > now - self.window_s]
         if len(self.failures) >= self.threshold:
+            if self._opened_at is None:
+                self._opened_at = now
             self.open_until = now + self.cooldown_s
 
     def record_success(self, now: float) -> None:
         if self.open_until is not None and now >= self.open_until:
             self.open_until = None       # half-open probe succeeded
             self.failures = []
+            if self._opened_at is not None:
+                self._dwell_s += max(0.0, now - self._opened_at)
+                self._opened_at = None
+
+    def dwell_s(self, now: float) -> float:
+        """Cumulative seconds spent not-closed (open or half-open): the
+        degradation dwell time this breaker has imposed on the ladder."""
+        d = self._dwell_s
+        if self._opened_at is not None:
+            d += max(0.0, now - self._opened_at)
+        return d
 
     def state(self, now: float) -> str:
         if self.open_until is None:
@@ -236,7 +263,9 @@ class ServeRuntime:
     """Admission, deadlines, retries and the degradation ladder (see
     module docstring) around one warmed :class:`ServeEngine`."""
 
-    def __init__(self, eng: ServeEngine, config: RuntimeConfig | None = None):
+    def __init__(self, eng: ServeEngine, config: RuntimeConfig | None = None,
+                 monitor=None,
+                 registry: obs_metrics.MetricsRegistry | None = None):
         if eng.mode not in ("plan", "scan"):
             raise ValueError(f"ServeRuntime needs a plan- or scan-mode "
                              f"engine (got mode={eng.mode!r}); static "
@@ -288,7 +317,20 @@ class ServeRuntime:
             "submitted", "completed", "expired", "failed", "retries",
             "finite_trips", "gauss_segments", "oom_splits", "repacks",
             "scan_waves", "exact_waves", "short_waves")}
-        self._latencies: list[float] = []
+        # -- observability: bounded latency reservoir (replaces the old
+        # unbounded list — O(reservoir) memory no matter the traffic),
+        # optional QualityMonitor, and the registry exports go through
+        self.monitor = monitor
+        if registry is not None:
+            self.registry = registry
+        elif monitor is not None:
+            self.registry = monitor.registry
+        else:
+            self.registry = obs_metrics.REGISTRY
+        self._lat_hist = obs_metrics.Histogram(
+            "serve_latency_seconds", "end-to-end request latency (s)",
+            reservoir=self.cfg.latency_reservoir)
+        self.registry.register(self._lat_hist)
 
     # -- Gaussian (Wiener) fallback programs ---------------------------------
     def _wiener_den(self) -> WienerDenoiser:
@@ -395,6 +437,17 @@ class ServeRuntime:
                 jax.block_until_ready(
                     fn(jnp.zeros(shape, jnp.float32),
                        jnp.asarray(ts, jnp.int32), np.int32(0), np.int32(1)))
+        if self.monitor is not None:
+            # recall probes fire at executed-step timesteps of any plan
+            # variant (and the scan grid): warm every one of them so
+            # monitoring never costs a post-warmup compile
+            probe_ts: set[int] = set()
+            for p in self.plans.values():
+                probe_ts.update(int(t) for t in p.ts[:-1])
+            scan_ts = sampling_timesteps(self.eng.schedule,
+                                         self.eng.num_steps)
+            probe_ts.update(int(t) for t in scan_ts[:-1])
+            stats["probe_ts_warmed"] = self.monitor.warmup(sorted(probe_ts))
         self._warm = True
         self._builds_warm = self.engine._builds
         stats["runtime_warmup_s"] = time.time() - t0
@@ -419,14 +472,23 @@ class ServeRuntime:
                        expiry=None if dl is None else now + float(dl))
             self._queue.append(t)
             self.counters["submitted"] += 1
+            tr = obs_trace.tracer()
+            if tr.enabled:
+                tr.event("request.admit", request=req.request_id,
+                         images=int(req.num_images),
+                         queue_depth=len(self._queue))
             return t
 
     def _expire_queued(self, now: float) -> None:
         keep = []
+        tr = obs_trace.tracer()
         for t in self._queue:
             if t.expiry is not None and now > t.expiry:
                 t.status = "expired"
                 self.counters["expired"] += 1
+                if tr.enabled:
+                    tr.event("request.expire", request=t.request.request_id,
+                             phase="queued")
             else:
                 keep.append(t)
         self._queue = keep
@@ -477,6 +539,11 @@ class ServeRuntime:
             if name in ("short", "short_exact"):
                 self.counters["short_waves"] += 1
             self._waves.append(wave)
+            tr = obs_trace.tracer()
+            if tr.enabled:
+                tr.event("wave.admit", wave=wave.seq, mode=mode, plan=name,
+                         bucket=bucket, used=used,
+                         requests=[t.request.request_id for t, _ in parts])
 
     def _pick_wave(self, now: float) -> _Wave | None:
         """Earliest-deadline-first over waves, FIFO on ties."""
@@ -519,7 +586,19 @@ class ServeRuntime:
     def _run_segment(self, wave: _Wave):
         """Run the wave's current segment with retries, the OOM split
         escape hatch, and the Gaussian fallback.  Returns
-        ``("ok", new_x)`` or ``("split", None)``."""
+        ``("ok", new_x)`` or ``("split", None)``.  With tracing enabled
+        the whole attempt loop runs inside a ``wave.segment`` span."""
+        tr = obs_trace.tracer()
+        if not tr.enabled:
+            return self._run_segment_inner(wave, tr)
+        ts, start, stop = self._segment_grid(wave)
+        with tr.span("wave.segment", wave=wave.seq, cursor=wave.cursor,
+                     mode=wave.mode, plan=wave.plan_name,
+                     bucket=wave.bucket, used=wave.used,
+                     start=start, stop=stop):
+            return self._run_segment_inner(wave, tr)
+
+    def _run_segment_inner(self, wave: _Wave, tr):
         x_prev = wave.x
         attempt = 0
         while True:
@@ -538,7 +617,11 @@ class ServeRuntime:
                 break
             except RETRYABLE_ERRORS as e:
                 now = self.cfg.clock()
-                if self._is_oom(str(e)):
+                oom = self._is_oom(str(e))
+                if tr.enabled:
+                    tr.event("wave.retry", wave=wave.seq, attempt=attempt,
+                             oom=oom, error=type(e).__name__)
+                if oom:
                     self.br_oom.record_failure(now)
                     if wave.bucket > 1:
                         return "split", None
@@ -548,6 +631,9 @@ class ServeRuntime:
                 self.counters["retries"] += 1
                 wave.retries += 1
                 if attempt > self.cfg.max_retries:
+                    if tr.enabled:
+                        tr.event("wave.gauss_fallback", wave=wave.seq,
+                                 cursor=wave.cursor)
                     out = self._run_gauss(wave, x_prev)
                     wave.degraded = True
                     break
@@ -558,6 +644,10 @@ class ServeRuntime:
         if not row_ok.all():
             nbad = int((~row_ok).sum())
             self.counters["finite_trips"] += nbad
+            if self.monitor is not None:
+                self.monitor.on_finite_trips(nbad)
+            if tr.enabled:
+                tr.event("wave.finite_trip", wave=wave.seq, rows=nbad)
             self.br_screen.record_failure(self.cfg.clock())
             gauss = self._run_gauss(wave, x_prev)
             bad = np.flatnonzero(~row_ok)
@@ -593,10 +683,17 @@ class ServeRuntime:
                 seq=self._seq, mode=wave.mode, plan_name=wave.plan_name,
                 plan=wave.plan, bucket=bucket, x=x, parts=parts,
                 cursor=wave.cursor, retries=wave.retries, degraded=True))
+            tr = obs_trace.tracer()
+            if tr.enabled:
+                tr.event("wave.split", wave=wave.seq, child=self._seq,
+                         bucket=bucket, used=used)
             self._seq += 1
 
     def _deliver(self, wave: _Wave, now: float) -> None:
         shape = self.eng.store.image_shape
+        tr = obs_trace.tracer()
+        if self.monitor is not None and wave.degraded:
+            self.monitor.on_degrade()
         ofs = 0
         for t, n in wave.parts:
             rows = wave.x[ofs: ofs + n]
@@ -604,17 +701,27 @@ class ServeRuntime:
             if t.expiry is not None and now > t.expiry:
                 t.status = "expired"     # strict: late even at the end
                 self.counters["expired"] += 1
+                if tr.enabled:
+                    tr.event("request.expire",
+                             request=t.request.request_id, phase="deliver")
                 continue
             if not np.isfinite(rows).all():     # unreachable by design;
                 t.status = "failed"             # belt over the suspenders
                 self.counters["failed"] += 1
+                if tr.enabled:
+                    tr.event("request.failed",
+                             request=t.request.request_id)
                 continue
             t.images = rows.reshape((n,) + tuple(shape)).copy()
             t.latency_s = now - t.submitted_at
             t.degraded = t.degraded or wave.degraded
             t.status = "done"
             self.counters["completed"] += 1
-            self._latencies.append(t.latency_s)
+            self._lat_hist.observe(t.latency_s)
+            if tr.enabled:
+                tr.event("request.deliver", request=t.request.request_id,
+                         wave=wave.seq, latency_s=t.latency_s,
+                         degraded=t.degraded)
         self._waves.remove(wave)
 
     def _post_segment(self, wave: _Wave, result) -> None:
@@ -623,6 +730,12 @@ class ServeRuntime:
         if status == "split":
             self._split(wave)
             return
+        if self.monitor is not None:
+            ts, start, stop = self._segment_grid(wave)
+            for i in range(start, stop):
+                self.monitor.record_step(int(ts[i]))
+            self.monitor.maybe_probe_recall(out[:wave.used],
+                                            int(ts[stop - 1]))
         wave.x = out
         wave.cursor += 1
         if wave.cursor >= wave.num_segments():
@@ -635,11 +748,16 @@ class ServeRuntime:
         compact survivors to the prefix, repack to a smaller warmed
         bucket when possible.  Returns True if the whole wave died."""
         alive, dead_rows, ofs = [], [], 0
+        tr = obs_trace.tracer()
         for t, n in wave.parts:
             if t.expiry is not None and now > t.expiry:
                 t.status = "expired"
                 self.counters["expired"] += 1
                 dead_rows.append((ofs, n))
+                if tr.enabled:
+                    tr.event("request.expire",
+                             request=t.request.request_id, phase="seam",
+                             wave=wave.seq)
             else:
                 alive.append((t, n))
             ofs += n
@@ -656,6 +774,10 @@ class ServeRuntime:
             x[:used] = wave.x[: len(keep)][keep]
             if bucket < wave.bucket:
                 self.counters["repacks"] += 1
+                if tr.enabled:
+                    tr.event("wave.repack", wave=wave.seq,
+                             bucket=bucket, prev_bucket=wave.bucket,
+                             used=used)
             wave.x, wave.bucket, wave.parts = x, bucket, alive
         return False
 
@@ -722,16 +844,19 @@ class ServeRuntime:
     def health(self) -> dict:
         with self._lock:
             now = self.cfg.clock()
-            lat = np.asarray(self._latencies, np.float64)
             finished = (self.counters["completed"]
                         + self.counters["expired"] + self.counters["failed"])
-            return {
+            h = {
                 "queue_depth": len(self._queue),
                 "inflight_waves": len(self._waves),
                 "breaker_exec": self.br_exec.state(now),
                 "breaker_screen": self.br_screen.state(now),
                 "breaker_oom": self.br_oom.state(now),
                 "breaker_compile": self.br_compile.state(now),
+                "dwell_exec_s": self.br_exec.dwell_s(now),
+                "dwell_screen_s": self.br_screen.dwell_s(now),
+                "dwell_oom_s": self.br_oom.dwell_s(now),
+                "dwell_compile_s": self.br_compile.dwell_s(now),
                 "degraded_scan_mode": (self.eng.mode == "plan"
                                        and self.br_compile.is_open(now)),
                 "degraded_exact_screen": self.br_screen.is_open(now),
@@ -739,11 +864,47 @@ class ServeRuntime:
                 "compiles_post_warmup": (self.engine._builds
                                          - self._builds_warm
                                          if self._warm else 0),
-                "p50_ms": float(np.percentile(lat, 50) * 1e3)
-                if lat.size else 0.0,
-                "p99_ms": float(np.percentile(lat, 99) * 1e3)
-                if lat.size else 0.0,
+                "p50_ms": self._lat_hist.quantile(0.5) * 1e3,
+                "p95_ms": self._lat_hist.quantile(0.95) * 1e3,
+                "p99_ms": self._lat_hist.quantile(0.99) * 1e3,
+                "latency_samples": self._lat_hist.count,
                 "deadline_miss_rate": (self.counters["expired"] / finished
                                        if finished else 0.0),
                 **{f"n_{k}": v for k, v in self.counters.items()},
             }
+            if self.monitor is not None:
+                h.update(self.monitor.health())
+            return h
+
+    def _sync_registry(self, now: float) -> None:
+        """Mirror runtime-local state (counters, breakers, queue) into
+        ``self.registry`` so one registry export carries the whole
+        stack's metrics (monitor metrics already live there; the
+        latency histogram was registered at construction)."""
+        reg = self.registry
+        for k, v in self.counters.items():
+            reg.gauge(f"serve_{k}_total").set(v)
+        reg.gauge("serve_queue_depth").set(len(self._queue))
+        reg.gauge("serve_inflight_waves").set(len(self._waves))
+        reg.gauge("serve_compiles_post_warmup").set(
+            self.engine._builds - self._builds_warm if self._warm else 0)
+        for name, br in (("exec", self.br_exec),
+                         ("screen", self.br_screen),
+                         ("oom", self.br_oom),
+                         ("compile", self.br_compile)):
+            reg.gauge(f"serve_breaker_{name}_open").set(
+                1.0 if br.is_open(now) else 0.0)
+            reg.gauge(f"serve_breaker_{name}_dwell_seconds").set(
+                br.dwell_s(now))
+
+    def metrics_snapshot(self) -> dict:
+        """JSON-friendly dict of every metric in the registry."""
+        with self._lock:
+            self._sync_registry(self.cfg.clock())
+        return self.registry.snapshot()
+
+    def prometheus(self) -> str:
+        """Prometheus text exposition of the same registry."""
+        with self._lock:
+            self._sync_registry(self.cfg.clock())
+        return self.registry.prometheus()

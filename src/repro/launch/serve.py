@@ -56,6 +56,8 @@ from repro.core import (GoldDiff, GoldDiffConfig, build_plan, make_schedule,
 from repro.core.denoisers import OptimalDenoiser, make_denoiser
 from repro.core.schedules import sampling_timesteps
 from repro.data import make_dataset
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 
 
 @dataclasses.dataclass
@@ -86,7 +88,8 @@ class ServeEngine:
                  max_batch: int = 16, mesh=None, mode: str = "auto",
                  plan_threshold: float = 0.15,
                  max_buckets: int | None = None,
-                 clip_value: float | None = 3.0, index=None):
+                 clip_value: float | None = 3.0, index=None,
+                 index_mode: str = "auto"):
         self.store = make_dataset(dataset, **(dataset_kw or {}))
         self.schedule = make_schedule(schedule, 1000)
         self.num_steps = num_steps
@@ -94,7 +97,8 @@ class ServeEngine:
         self.clip_value = clip_value
         base_den = make_denoiser(base, self.store, self.schedule)
         self.denoiser = GoldDiff(base_den, gd_cfg or GoldDiffConfig(),
-                                 mesh=mesh, index=index)
+                                 mesh=mesh, index=index,
+                                 index_mode=index_mode)
         # pinned here so baseline subclasses may swap ``denoiser`` (e.g.
         # unwrap to the full-scan base) and keep the program cache
         self._engine = self.denoiser.engine
@@ -330,7 +334,21 @@ def main():
                     help="max padded-FLOP overhead per bucket")
     ap.add_argument("--no-warmup", action="store_true",
                     help="skip precompiling the (batch x shape) buckets")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="enable tracing (engine spans, plan segments, "
+                         "dispatch events) and dump the event log as "
+                         "JSONL to PATH on exit")
+    ap.add_argument("--metrics", action="store_true",
+                    help="count dispatches/compiles per program kind and "
+                         "print a Prometheus text snapshot on exit")
     args = ap.parse_args()
+
+    tracer = (obs_trace.Tracer(capacity=1 << 16) if args.trace_out
+              else obs_trace.NULL_TRACER)
+    if args.trace_out or args.metrics:
+        obs_trace.set_tracer(tracer)
+        obs_trace.install_dispatch_tracing(
+            tracer, obs_metrics.REGISTRY if args.metrics else None)
 
     mode = "auto"
     if args.base == "optimal":
@@ -358,6 +376,12 @@ def main():
     n_img = sum(r.images.shape[0] for r in results)
     print(f"served {n_img} images in {total:.2f}s "
           f"({total/max(n_img,1):.3f}s/image, {args.steps} steps)")
+    if args.trace_out:
+        tracer.dump(args.trace_out)
+        print(f"trace: {len(tracer.events())} events "
+              f"({tracer.dropped} dropped) -> {args.trace_out}")
+    if args.metrics:
+        print(obs_metrics.REGISTRY.prometheus(), end="")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,40 @@
+"""Zero-dependency observability layer: tracing, metrics, quality.
+
+* ``repro.obs.trace``   — ``Tracer`` (nestable spans, bounded ring
+  buffer), the process-global current tracer (``set_tracer`` /
+  ``tracer()``, off by default via ``NULL_TRACER``), and ``TraceHook``
+  for the program-dispatch seam.
+* ``repro.obs.metrics`` — typed ``Counter``/``Gauge``/``Histogram``
+  (bounded reservoir quantiles) in a ``MetricsRegistry``
+  (process-global default: ``REGISTRY``), exported as JSON snapshots
+  and Prometheus text.
+* ``repro.obs.quality`` — ``QualityMonitor``: sampled online
+  screening-recall proxy, the concentration curve (k_t/N and probe
+  occupancy vs t), finite-guard/degradation rates.
+
+``trace`` and ``metrics`` import nothing from the rest of the repo, so
+any layer (kernels included) may import them without cycles;
+``quality`` sits above the index layer and is re-exported lazily.
+"""
+from __future__ import annotations
+
+from repro.obs import metrics, trace
+from repro.obs.metrics import (REGISTRY, Counter, Gauge, Histogram,
+                               MetricsRegistry)
+from repro.obs.trace import (NULL_TRACER, Tracer, TraceHook,
+                             install_dispatch_tracing, set_tracer, tracer,
+                             uninstall_dispatch_tracing)
+
+__all__ = ["metrics", "trace", "REGISTRY", "Counter", "Gauge", "Histogram",
+           "MetricsRegistry", "NULL_TRACER", "Tracer", "TraceHook",
+           "install_dispatch_tracing", "set_tracer", "tracer",
+           "uninstall_dispatch_tracing", "QualityMonitor"]
+
+
+def __getattr__(name):
+    # lazy: quality imports the index layer, which imports core — keep
+    # ``repro.core.engine -> repro.obs`` cycle-free
+    if name == "QualityMonitor":
+        from repro.obs.quality import QualityMonitor
+        return QualityMonitor
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

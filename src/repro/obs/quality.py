@@ -1,0 +1,203 @@
+"""Online quality monitors: screening recall, concentration, guards.
+
+The paper's speed/quality contract is checked offline by tier-2
+benchmarks; this module checks it *online*, at serve time, at a
+configurable sample rate so the hot path stays unperturbed:
+
+* **streaming screening-recall proxy** — on a sampled subset of
+  segment seams, run BOTH the indexed coarse screen and the exact
+  top-m screen on the first ``probe_rows`` rows of the live wave state
+  and record their overlap (``repro.index.store.screening_recall``,
+  the same metric the tier-2 gate uses).  This is the quantity that
+  silently degrades when ``ProbeSchedule`` narrows at high SNR.
+* **concentration curve** — per executed timestep: the golden-subset
+  fraction k_t/N and the probe-occupancy fraction (rows the coarse
+  stage touches / N), as per-t gauges (the curve, readable straight
+  off a Prometheus scrape) plus aggregate histograms.  This is the
+  paper's Posterior Progressive Concentration made observable in
+  production.
+* **guard rates** — finite-guard trips and degraded-rung entries as
+  counters (the runtime drives them), alongside its breaker
+  dwell-time accounting.
+
+Probe decisions draw from the same deterministic counter-based
+splitmix stream as the metrics reservoir: a given ``seed`` + call
+order reproduces the same probe points, independent of wall clock.
+
+Probe programs are cached in the engine's own compiled-program cache
+under ``"obs_screen_*"`` kinds — NOT in the fault injector's default
+target set (a monitor that can be faulted measures the injector, not
+the system) — and :meth:`QualityMonitor.warmup` precompiles them, so
+enabling monitors does not break the zero-post-warmup-compile guard.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro.obs import metrics as _metrics
+
+
+class QualityMonitor:
+    """Sampled online quality telemetry for one ``GoldDiffEngine``.
+
+    ``sample_rate`` is the per-opportunity probability of running the
+    (two extra dispatches) recall probe; concentration recording is
+    analytic host arithmetic and runs on every reported step.
+    """
+
+    def __init__(self, engine, registry: _metrics.MetricsRegistry | None
+                 = None, sample_rate: float = 0.25, probe_rows: int = 2,
+                 seed: int = 0):
+        if not 0.0 <= sample_rate <= 1.0:
+            raise ValueError(f"sample_rate must be in [0, 1], got "
+                             f"{sample_rate}")
+        self.engine = engine
+        self.registry = registry if registry is not None \
+            else _metrics.REGISTRY
+        self.sample_rate = float(sample_rate)
+        self.probe_rows = int(probe_rows)
+        self.seed = seed
+        self._probe_n = 0                # sampling-decision counter
+        r = self.registry
+        self.recall_hist = r.histogram(
+            "golddiff_screen_recall_proxy",
+            "sampled indexed-vs-exact screening recall at segment seams")
+        self.recall_last = r.gauge(
+            "golddiff_screen_recall_last",
+            "most recent screening-recall probe value")
+        self.subset_hist = r.histogram(
+            "golddiff_subset_frac",
+            "golden-subset fraction k_t/N per executed step")
+        self.occupancy_hist = r.histogram(
+            "golddiff_probe_occupancy",
+            "fraction of store rows touched by the coarse stage per step")
+        self.steps = r.counter("golddiff_steps_total",
+                               "executed denoise steps observed")
+        self.probes = r.counter("golddiff_recall_probes_total",
+                                "screening-recall probes executed")
+        self.finite_trips = r.counter(
+            "golddiff_finite_trips_total",
+            "rows replaced by the Gaussian fallback after a finite-guard "
+            "trip")
+        self.degrades = r.counter("golddiff_degraded_waves_total",
+                                  "waves served on a non-primary rung")
+
+    # -- concentration (analytic, host-side) ----------------------------------
+    def _touched_frac(self, t: int) -> float:
+        eng = self.engine
+        n = eng.store.n
+        if eng.use_index(t):
+            return min(1.0, eng.nprobe(t) * eng.index.max_cluster / n)
+        return 1.0                       # exact screen reads every row
+
+    def record_step(self, t: int) -> None:
+        """Record the concentration curve for one executed timestep."""
+        t = int(t)
+        eng = self.engine
+        n = eng.store.n
+        m_t, k_t = eng.sizes(t)
+        occ = self._touched_frac(t)
+        self.steps.inc()
+        self.subset_hist.observe(k_t / n)
+        self.occupancy_hist.observe(occ)
+        r = self.registry
+        r.gauge(f"golddiff_k_frac_t{t}",
+                "golden-subset fraction k_t/N at this timestep"
+                ).set(k_t / n)
+        r.gauge(f"golddiff_occupancy_t{t}",
+                "coarse-stage touched fraction at this timestep").set(occ)
+        if eng.use_index(t):
+            r.gauge(f"golddiff_nprobe_t{t}",
+                    "scheduled probe count at this timestep"
+                    ).set(eng.nprobe(t))
+
+    # -- guard / degradation hooks (driven by the runtime) --------------------
+    def on_finite_trips(self, n: int) -> None:
+        self.finite_trips.inc(n)
+
+    def on_degrade(self) -> None:
+        self.degrades.inc()
+
+    # -- recall probe ---------------------------------------------------------
+    def _probe_programs(self, t: int, rows: int):
+        """(exact, indexed) compiled probe screens for static ``t`` over
+        a ``[rows, D]`` query — cached under obs-only program kinds."""
+        eng = self.engine
+        m_t, _ = eng.sizes(t)
+        mp, npb = eng.padded_m(t), eng.nprobe(t)
+        shape = (rows, eng.store.dim)
+        exact = eng.program(
+            ("obs_screen_exact", t, shape, m_t, eng.backend),
+            lambda: jax.jit(lambda q: eng.coarse(q, m_t)))
+        ivf = eng.program(
+            ("obs_screen_ivf", t, shape, mp, npb, eng.backend),
+            lambda: jax.jit(lambda q: eng.coarse_indexed(q, mp, npb)))
+        return exact, ivf
+
+    def probe_recall(self, x, t: int) -> float | None:
+        """Indexed-vs-exact screening recall on the first ``probe_rows``
+        rows of ``x`` (current state at timestep ``t``).  Returns None
+        when the step screens exactly (nothing to proxy).  Probes always
+        run at exactly ``probe_rows`` rows (short inputs are tiled) so
+        the probe-program shapes are static and :meth:`warmup` covers
+        every post-warmup probe."""
+        t = int(t)
+        eng = self.engine
+        if not eng.use_index(t) or x.shape[0] == 0:
+            return None
+        from repro.index.store import screening_recall
+        rows = max(1, self.probe_rows)
+        a, _ = eng.constants(t)
+        q = np.asarray(x[:rows], np.float32)
+        if q.shape[0] < rows:
+            reps = -(-rows // q.shape[0])
+            q = np.tile(q, (reps, 1))[:rows]
+        q = q / a
+        exact_fn, ivf_fn = self._probe_programs(t, rows)
+        exact_ids = jax.block_until_ready(exact_fn(q))
+        pos, pd2 = jax.block_until_ready(ivf_fn(q))
+        rec = screening_recall(pos, pd2, eng.index.perm, exact_ids)
+        self.probes.inc()
+        self.recall_hist.observe(rec)
+        self.recall_last.set(rec)
+        return rec
+
+    def maybe_probe_recall(self, x, t: int) -> float | None:
+        """Sampled :meth:`probe_recall` (deterministic decision stream)."""
+        n = self._probe_n
+        self._probe_n = n + 1
+        if self.sample_rate <= 0.0 \
+                or _metrics._unit(self.seed, n) >= self.sample_rate:
+            return None
+        return self.probe_recall(x, t)
+
+    # -- summary --------------------------------------------------------------
+    def health(self) -> dict:
+        """Flat summary for ``ServeRuntime.health()`` (JSON-friendly)."""
+        return {
+            "screen_recall_last": self.recall_last.value,
+            "screen_recall_p50": self.recall_hist.quantile(0.5),
+            "subset_frac_p50": self.subset_hist.quantile(0.5),
+            "probe_occupancy_p50": self.occupancy_hist.quantile(0.5),
+            "n_recall_probes": self.probes.value,
+            "n_steps_observed": self.steps.value,
+        }
+
+    # -- warmup ---------------------------------------------------------------
+    def warmup(self, ts, rows: int | None = None) -> int:
+        """Precompile the probe programs for every indexed timestep in
+        ``ts`` (zero post-warmup compiles even with monitors on).
+        Returns the number of timesteps warmed."""
+        eng = self.engine
+        rows = self.probe_rows if rows is None else int(rows)
+        warmed = 0
+        q = np.zeros((max(1, rows), eng.store.dim), np.float32)
+        for t in sorted({int(t) for t in ts}):
+            if not eng.use_index(t):
+                continue
+            exact_fn, ivf_fn = self._probe_programs(t, q.shape[0])
+            jax.block_until_ready(exact_fn(q))
+            jax.block_until_ready(ivf_fn(q))
+            warmed += 1
+        return warmed

@@ -163,3 +163,63 @@ def test_budget_pair_gates_plan_flops(tmp_path):
                        "serve/plan_flops/t1": -1.0})
     assert any("non-positive" in f
                for f in check_bench.check_file(bad_subj, 1.0))
+
+
+def test_obs_overhead_budget_pair(tmp_path):
+    """obs_base_us -> obs_traced_us is a 1.03x budget pair: a warm step
+    with the tracer enabled may cost at most 3% over tracing-off."""
+    ok = _write(tmp_path, "BENCH_t.json",
+                {"obs/denoise/N4096/t800/obs_base_us": 1000.0,
+                 "obs/denoise/N4096/t800/obs_traced_us": 1020.0})
+    assert check_bench.check_file(ok, 1.0) == []
+    over = _write(tmp_path, "BENCH_t2.json",
+                  {"obs/denoise/N4096/t800/obs_base_us": 1000.0,
+                   "obs/denoise/N4096/t800/obs_traced_us": 1050.0})
+    fails = check_bench.check_file(over, 1.0)
+    assert len(fails) == 1 and "exceeds" in fails[0] \
+        and "obs_traced_us" in fails[0]
+
+
+def _roofline_record(**over):
+    rec = {"roofline/peak/peak_gflops": 100.0,
+           "roofline/peak/peak_gbps": 20.0}
+    for stage in ("screen", "rerank", "aggregate", "full_scan"):
+        rec[f"roofline/denoise/N1/t1/{stage}/achieved_gflops"] = 50.0
+        rec[f"roofline/denoise/N1/t1/{stage}/achieved_gbps"] = 10.0
+    rec.update(over)
+    return rec
+
+
+def test_roofline_good_record_passes(tmp_path):
+    p = _write(tmp_path, "BENCH_r.json", _roofline_record())
+    assert check_bench.check_file(p, 1.0) == []
+    # roofline gating is opt-in: records without roofline cells skip it
+    q = _write(tmp_path, "BENCH_r0.json", {"a/seed_eager/t1": 2.0,
+                                           "a/engine_xla/t1": 1.0})
+    assert check_bench.check_file(q, 1.0) == []
+
+
+def test_roofline_achieved_must_not_exceed_peak(tmp_path):
+    p = _write(tmp_path, "BENCH_r.json", _roofline_record(**{
+        "roofline/denoise/N1/t1/rerank/achieved_gflops": 150.0,
+        "roofline/denoise/N1/t1/screen/achieved_gbps": 25.0}))
+    fails = check_bench.check_file(p, 1.0)
+    assert len(fails) == 2
+    assert all("exceeds the measured peak" in f for f in fails)
+    zero = _write(tmp_path, "BENCH_rz.json", _roofline_record(**{
+        "roofline/denoise/N1/t1/rerank/achieved_gflops": 0.0}))
+    assert any("must be positive" in f
+               for f in check_bench.check_file(zero, 1.0))
+
+
+def test_roofline_requires_peaks_and_all_stages(tmp_path):
+    rec = _roofline_record()
+    del rec["roofline/peak/peak_gbps"]
+    for k in list(rec):
+        if "/full_scan/" in k:
+            del rec[k]
+    p = _write(tmp_path, "BENCH_r.json", rec)
+    fails = check_bench.check_file(p, 1.0)
+    assert any("peak_gbps" in f and "missing" in f for f in fails)
+    assert any("missing required stage" in f and "full_scan" in f
+               for f in fails)
