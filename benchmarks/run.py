@@ -15,7 +15,8 @@ import traceback
 
 from benchmarks import (engine_speedup, fig3_sensitivity, fig6_hparams,
                         index_speedup, roofline, screen_speedup,
-                        serve_latency, serve_resilience, sharded_speedup,
+                        serve_latency, serve_resilience,
+                        serve_throughput, sharded_speedup,
                         table1_complexity, table2_quality, table3_scale,
                         table4_edm, table5_orthogonality, table6_bias)
 
@@ -34,6 +35,7 @@ TABLES = {
     "screen_speedup": screen_speedup,
     "serve_latency": serve_latency,
     "serve_resilience": serve_resilience,
+    "serve_throughput": serve_throughput,
     "sharded_speedup": sharded_speedup,
 }
 

@@ -55,6 +55,12 @@ BUDGET_PAIRS = {
     # the same step with tracing off (benchmarks/roofline.py emits the
     # pair into BENCH_engine.json)
     "obs_base_us": ("obs_traced_us", 1.03),
+    # continuous batching (BENCH_serve.json, benchmarks/
+    # serve_throughput.py): at identical flash-crowd offered load,
+    # mid-trajectory admission must deliver at least 1.5x lower p99
+    # end-to-end latency than wave-at-a-time, i.e. the continuous
+    # subject stays <= 2/3x its wave baseline
+    "wave_p99_steps": ("continuous_p99_steps", 2.0 / 3.0),
 }
 RECALL_MIN = 0.95
 # completion/ cells are delivered/admitted fractions under fault

@@ -1,0 +1,68 @@
+#!/usr/bin/env python
+"""Docs gate: fail on broken intra-repo links or stale module refs.
+
+Scans README.md and docs/*.md for (a) relative markdown links whose
+target doesn't exist, and (b) backtick-quoted repo paths
+(``src/...``, ``tests/...``, ``scripts/...``, ``benchmarks/...``) or
+dotted ``repro.*`` module names that no longer resolve — so a rename
+or deletion fails CI instead of silently rotting the docs.
+
+  python scripts/check_docs.py [--root .]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import os
+import re
+import sys
+
+LINK = re.compile(r"\[[^\]]*\]\(([^)#\s]+)(?:#[^)]*)?\)")
+CODE = re.compile(r"`([A-Za-z0-9_./-]+)`")
+PATH_PREFIXES = ("src/", "tests/", "scripts/", "benchmarks/", "docs/",
+                 "examples/", ".github/")
+
+
+def module_exists(root: str, dotted: str) -> bool:
+    rel = os.path.join("src", *dotted.split("."))
+    return (os.path.exists(os.path.join(root, rel + ".py"))
+            or os.path.isdir(os.path.join(root, rel)))
+
+
+def check_file(root: str, path: str) -> list[str]:
+    errs = []
+    text = open(path).read()
+    base = os.path.dirname(path)
+    for m in LINK.finditer(text):
+        target = m.group(1)
+        if "://" in target or target.startswith("mailto:"):
+            continue
+        if not os.path.exists(os.path.normpath(os.path.join(base, target))):
+            errs.append(f"{path}: broken link -> {target}")
+    for m in CODE.finditer(text):
+        ref = m.group(1)
+        if ref.startswith(PATH_PREFIXES):
+            if not os.path.exists(os.path.join(root, ref.rstrip("/"))):
+                errs.append(f"{path}: stale path reference `{ref}`")
+        elif re.fullmatch(r"repro(\.\w+)+", ref) and \
+                not module_exists(root, ref):
+            errs.append(f"{path}: stale module reference `{ref}`")
+    return errs
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--root", default=".")
+    args = ap.parse_args()
+    files = [p for p in [os.path.join(args.root, "README.md")]
+             + sorted(glob.glob(os.path.join(args.root, "docs", "*.md")))
+             if os.path.exists(p)]
+    errs = [e for p in files for e in check_file(args.root, p)]
+    for e in errs:
+        print(e)
+    print(f"check_docs: {len(files)} file(s), {len(errs)} error(s)")
+    return 1 if errs else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,212 @@
+#!/usr/bin/env python
+"""Reconstruct per-request queue/segment timelines from a trace dump.
+
+Reads the ``--trace-out`` JSONL a serving CLI writes (the unified
+event schema of ``repro/obs/trace.py``: one JSON object per line with
+``seq``/``ts``/``kind``/``name``/``span``/``parent``/``tags``) and
+rebuilds each request's lifecycle from the runtime's events:
+
+  request.admit -> wave.admit | wave.join -> wave.segment* ->
+  request.deliver | request.expire
+
+For every delivered request it splits end-to-end latency into
+
+* **queue**  — submit until the request entered a wave (fresh wave or
+  mid-trajectory join),
+* **active** — summed ``wave.segment`` span durations that advanced
+  the request's own cursor group,
+* **frozen** — wave-resident time spent in segments that advanced a
+  *different* cursor group (mixed-cursor waves: co-batched neighbors'
+  catch-up or drain),
+
+and prints a p50/p99 queue-vs-compute breakdown — the table the
+serving runbook (docs/SERVING.md) uses for tail-latency triage.
+Cursor attribution follows each part's seam progression; waves that
+OOM-split mid-flight keep their timelines via the ``wave.split``
+child id.
+
+  PYTHONPATH=src python scripts/trace_latency.py TRACE.jsonl [--per-request]
+  PYTHONPATH=src python scripts/trace_latency.py --demo
+
+``--demo`` drives a small ServeRuntime over one flash-crowd schedule
+twice — wave-at-a-time vs continuous admission — dumps both traces,
+and analyzes each: the before/after evidence for mid-trajectory
+admission (see BENCH_serve.json ``throughput/`` cells for the gated
+version).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def load_events(path: str) -> list[dict]:
+    evs = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if line:
+                evs.append(json.loads(line))
+    return sorted(evs, key=lambda e: e["seq"])
+
+
+def reconstruct(events: list[dict]) -> dict:
+    """request_id -> timeline dict (see module docstring)."""
+    reqs: dict = {}
+    segments = []                # (ts, wave, cursor, dur)
+    span_open: dict = {}         # span id -> begin event (wave.segment)
+    child_of: dict = {}          # split child wave -> parent wave
+    for e in events:
+        name, tags = e["name"], e["tags"]
+        if e["kind"] == "begin" and name == "wave.segment":
+            span_open[e["span"]] = e
+        elif e["kind"] == "end" and e["span"] in span_open:
+            b = span_open.pop(e["span"])
+            segments.append((b["ts"], b["tags"]["wave"],
+                             b["tags"].get("cursor", 0),
+                             tags.get("dur", 0.0)))
+        elif name == "request.admit":
+            reqs[tags["request"]] = {"submit_ts": e["ts"], "start_ts": None,
+                                     "end_ts": None, "wave": None,
+                                     "status": "queued", "latency_s": None}
+        elif name == "wave.admit":
+            for rid in tags.get("requests", []):
+                if rid in reqs and reqs[rid]["start_ts"] is None:
+                    reqs[rid].update(start_ts=e["ts"], wave=tags["wave"],
+                                     status="running")
+        elif name == "wave.join":
+            r = reqs.get(tags["request"])
+            if r is not None and r["start_ts"] is None:
+                r.update(start_ts=e["ts"], wave=tags["wave"],
+                         status="running")
+        elif name == "wave.split":
+            child_of[tags["child"]] = tags["wave"]
+        elif name == "request.deliver":
+            r = reqs.get(tags["request"])
+            if r is not None:
+                r.update(end_ts=e["ts"], status="done",
+                         latency_s=tags.get("latency_s"))
+                # delivery names the final wave: follow splits back so
+                # earlier segments still attribute to this request
+                w = tags["wave"]
+                lineage = {w}
+                while w in child_of:
+                    w = child_of[w]
+                    lineage.add(w)
+                r["waves"] = lineage
+        elif name == "request.expire":
+            r = reqs.get(tags["request"])
+            if r is not None:
+                r.update(end_ts=e["ts"], status="expired")
+    # attribute segment durations: a segment advances the request's
+    # cursor group iff its cursor equals the request's current cursor
+    for r in reqs.values():
+        r["active_s"] = r["frozen_s"] = 0.0
+        if r["start_ts"] is None or r["end_ts"] is None:
+            continue
+        waves = r.get("waves") or ({r["wave"]} if r["wave"] is not None
+                                   else set())
+        cursor = 0
+        for ts, wave, seg, dur in segments:
+            if wave not in waves or not r["start_ts"] <= ts <= r["end_ts"]:
+                continue
+            if seg == cursor:
+                r["active_s"] += dur
+                cursor += 1
+            else:
+                r["frozen_s"] += dur
+        r["queue_s"] = r["start_ts"] - r["submit_ts"]
+        r["total_s"] = r["end_ts"] - r["submit_ts"]
+    return reqs
+
+
+def _pct(xs: list[float], q: float) -> float:
+    if not xs:
+        return 0.0
+    xs = sorted(xs)
+    i = min(len(xs) - 1, int(round(q / 100 * (len(xs) - 1))))
+    return xs[i]
+
+
+def report(reqs: dict, per_request: bool = False, out=sys.stdout) -> None:
+    done = {k: r for k, r in reqs.items() if r["status"] == "done"}
+    other = len(reqs) - len(done)
+    if per_request:
+        out.write(f"{'request':>8} {'queue_ms':>9} {'active_ms':>10} "
+                  f"{'frozen_ms':>10} {'total_ms':>9}\n")
+        for rid, r in sorted(done.items()):
+            out.write(f"{rid!s:>8} {r['queue_s'] * 1e3:>9.2f} "
+                      f"{r['active_s'] * 1e3:>10.2f} "
+                      f"{r['frozen_s'] * 1e3:>10.2f} "
+                      f"{r['total_s'] * 1e3:>9.2f}\n")
+    cols = [("queue", "queue_s"), ("active", "active_s"),
+            ("frozen", "frozen_s"), ("total", "total_s")]
+    out.write(f"{len(done)} delivered"
+              + (f", {other} queued/expired/lost" if other else "")
+              + " — latency breakdown (ms):\n")
+    out.write(f"{'':>8}" + "".join(f"{c:>10}" for c, _ in cols) + "\n")
+    for q in (50, 99):
+        vals = [_pct([r[k] for r in done.values()], q) for _, k in cols]
+        out.write(f"{'p%d' % q:>8}"
+                  + "".join(f"{v * 1e3:>10.2f}" for v in vals) + "\n")
+
+
+def _demo() -> None:
+    """Drive one flash-crowd schedule both ways and analyze the dumps."""
+    from repro.launch.runtime import RuntimeConfig, ServeRuntime
+    from repro.launch.serve import Request, ServeEngine
+    from repro.obs.trace import Tracer, set_tracer
+
+    eng = ServeEngine("gmm", {"n": 512, "dim": 16}, num_steps=16,
+                      max_batch=8, plan_threshold=0.05)
+    arrivals = []                # (request_id, pumps-before-submit)
+    for lead in range(0, 12, 4):
+        arrivals.append((lead, 0 if lead == 0 else 12))
+        arrivals += [(lead + j, 1 if j == 1 else 0) for j in (1, 2, 3)]
+    for continuous in (False, True):
+        mode = "continuous" if continuous else "wave"
+        tr = Tracer(capacity=1 << 16)
+        prev = set_tracer(tr)
+        try:
+            rt = ServeRuntime(eng, RuntimeConfig(continuous=continuous))
+            rt.warmup()
+            tickets = []
+            for rid, gap in arrivals:
+                for _ in range(gap):
+                    rt.pump()
+                tickets.append(rt.submit(Request(rid, 2, seed=100 + rid)))
+            rt.run_until_idle()
+        finally:
+            set_tracer(prev)
+        path = f"trace_demo_{mode}.jsonl"
+        tr.dump(path)
+        print(f"== {mode} admission ({path}) ==")
+        report(reconstruct(load_events(path)))
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("trace", nargs="?", help="JSONL from --trace-out")
+    ap.add_argument("--per-request", action="store_true",
+                    help="print one row per delivered request")
+    ap.add_argument("--demo", action="store_true",
+                    help="generate + analyze wave-vs-continuous demo "
+                         "traces (writes trace_demo_*.jsonl)")
+    args = ap.parse_args()
+    if args.demo:
+        _demo()
+        return 0
+    if not args.trace:
+        ap.error("need a trace path (or --demo)")
+    reqs = reconstruct(load_events(args.trace))
+    if not reqs:
+        print("no request.admit events found — was the trace taken from "
+              "a ServeRuntime (not a bare ServeEngine.serve call)?")
+        return 1
+    report(reqs, per_request=args.per_request)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

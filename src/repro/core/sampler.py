@@ -138,6 +138,61 @@ def plan_segment_key(plan, bucket, shape: tuple, dtype_str: str,
             None if clip_value is None else float(clip_value))
 
 
+def plan_segment_mixed(denoise_masked: Callable, schedule: Schedule, plan,
+                       bucket, clip_value: float | None = 3.0) -> Callable:
+    """A plan segment that advances only a *subset* of its rows.
+
+    ``segment(x, pos)`` runs the same ``lax.scan`` body as
+    :func:`plan_segment` — same bucket caps, same scalar traced ``t`` —
+    but each row ``r`` carries a grid cursor ``pos[r]`` (int32) and only
+    rows whose cursor sits at this bucket's entry seam
+    (``pos[r] == bucket.start``) take the DDIM update; all other rows
+    pass through untouched (``jnp.where`` on the scan carry).  This is
+    the continuous-batching plug-in point: the serving runtime co-batches
+    requests at *different* trajectory cursors in one wave, and because
+    every engine op is row-independent the active rows here are
+    **bit-identical** to the same rows run through the plain
+    :func:`plan_segment` program (verified by the mixed-cursor parity
+    suite), so mid-trajectory admission is invisible to each request.
+
+    Admission happens only at bucket seams, so active rows are always
+    exactly at ``bucket.start`` — per-row activity masking over the
+    bucket scan is fully general here and ``t`` stays scalar (all active
+    rows share every scan index).  Frozen rows still flow through the
+    denoiser (their lanes are computed and discarded), which is what
+    keeps the program count bounded: one mixed program per
+    (plan bucket x batch bucket), all warmed by
+    ``ServeRuntime.warmup``.
+    """
+    ts = jnp.asarray(plan.ts)
+    a = jnp.asarray(schedule.a)
+    b = jnp.asarray(schedule.b)
+
+    def segment(x, pos):
+        active = pos == bucket.start
+
+        def body(x, i):
+            t, t_prev = ts[i], ts[i + 1]
+            x0_hat = _clip(denoise_masked(x, t, bucket.caps), clip_value)
+            eps_hat = (x - a[t] * x0_hat) / b[t]
+            x_next = a[t_prev] * x0_hat + b[t_prev] * eps_hat
+            return jnp.where(active[:, None], x_next, x), None
+        out, _ = jax.lax.scan(body, x,
+                              jnp.arange(bucket.start, bucket.stop))
+        return out
+    return segment
+
+
+def plan_segment_mixed_key(plan, bucket, shape: tuple, dtype_str: str,
+                           clip_value: float | None) -> tuple:
+    """Program-cache key of a mixed-cursor segment — same anatomy as
+    :func:`plan_segment_key` under its own kind tag, so plain and mixed
+    programs for one bucket coexist in the cache and both get warmed."""
+    return ("plan_seg_mix", bucket.start, bucket.stop, bucket.caps.sig(),
+            tuple(plan.ts), shape, dtype_str,
+            None if clip_value is None else float(clip_value))
+
+
 def sample_plan(denoise_masked: Callable, schedule: Schedule, shape: tuple,
                 rng: jax.Array, plan, clip_value: float | None = 3.0,
                 x_init: Array | None = None,

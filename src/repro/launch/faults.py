@@ -64,11 +64,14 @@ class TransientExecutorError(RuntimeError):
 RETRYABLE_ERRORS = (XlaRuntimeError, TransientExecutorError)
 
 # program kinds the injector touches by default: the trajectory compute
-# segments (plan buckets, the scan-mode program, static denoise steps,
-# full scans).  Deliberately excludes "serve_keys" / "serve_init" (the
-# per-request noise streams) and "gauss_seg" (the runtime's Gaussian
-# fallback must stay reliable for the ladder's last rung to be real).
-DEFAULT_TARGETS = ("plan_seg", "serve_scan", "denoise", "full_scan")
+# segments (plan buckets — plain AND mixed-cursor, so the ladder is
+# exercised on continuous-batching waves too — the scan-mode program,
+# static denoise steps, full scans).  Deliberately excludes
+# "serve_keys" / "serve_init" (the per-request noise streams) and
+# "gauss_seg" (the runtime's Gaussian fallback must stay reliable for
+# the ladder's last rung to be real).
+DEFAULT_TARGETS = ("plan_seg", "plan_seg_mix", "serve_scan", "denoise",
+                   "full_scan")
 
 FAULT_KINDS = ("nan", "latency", "error", "oom", "shard_drop", "evict")
 

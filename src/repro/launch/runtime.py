@@ -14,6 +14,23 @@ admission / scheduling / failure machinery a service actually needs:
   new waves, expire deadlined rows, and repack shrunken waves into
   smaller warmed batch buckets.  All of it happens at program
   boundaries, so the post-warmup zero-compile guarantee holds.
+* **continuous batching** — waves are per-segment *row sets*, not
+  lockstep cohorts: every part (one request's row block) carries its
+  own trajectory cursor, and at each seam freed slots — from delivery,
+  deadline expiry, or OOM splits — accept queued requests, each new
+  part starting at cursor 0 while its wave-mates keep theirs.  A wave
+  whose parts sit at different cursors runs the *mixed* segment program
+  (``sampler.plan_segment_mixed``): the same bucket scan with a per-row
+  activity mask, so only rows at the segment's entry seam advance and
+  the rest pass through untouched.  Active rows are **bit-identical**
+  to the plain per-bucket program (every engine op is row-independent),
+  and the per-request ``fold_in(seed, row)`` noise streams make
+  placement invisible — a request admitted mid-trajectory of another is
+  bitwise equal to the same request served alone.  Mixed programs are
+  warmed per (batch bucket x plan bucket x plan variant), so continuous
+  admission never touches the compiler.  ``RuntimeConfig(
+  continuous=False)`` restores wave-at-a-time admission (the
+  ``benchmarks/serve_throughput.py`` baseline).
 * **deadlines** — per-request (``Request.deadline_s``) or a default;
   expiry is checked at every seam *including final delivery*, so a
   completed request is structurally within its deadline and the
@@ -78,7 +95,9 @@ import numpy as np
 
 from repro.core import build_plan
 from repro.core.denoisers import WienerDenoiser
-from repro.core.sampler import plan_segment, plan_segment_key, sample_plan
+from repro.core.sampler import (plan_segment, plan_segment_key,
+                                plan_segment_mixed, plan_segment_mixed_key,
+                                sample_plan)
 from repro.core.schedules import sampling_timesteps
 from repro.launch.faults import RETRYABLE_ERRORS, unit_uniform
 from repro.launch.serve import Request, ServeEngine
@@ -140,6 +159,7 @@ class RuntimeConfig:
     breaker_window_s: float = 30.0
     breaker_cooldown_s: float = 2.0
     max_inflight_waves: int = 2
+    continuous: bool = True              # admit into in-flight waves at seams
     seed: int = 0
     idle_sleep_s: float = 0.005
     latency_reservoir: int = 1024        # bounded p50/p99 sample size
@@ -236,8 +256,31 @@ class _ExactRouting:
 
 
 @dataclasses.dataclass
+class _Part:
+    """One ticket's contiguous row block inside a wave.
+
+    ``cursor`` is the index of the next plan segment this part will run
+    (always a bucket seam: parts enter at 0 and only advance whole
+    segments, so a part's rows are exactly at ``plan.buckets[cursor]
+    .start`` on the timestep grid).  Under continuous admission parts at
+    different cursors co-exist in one wave; a part whose cursor reaches
+    ``num_segments`` is delivered and its rows compacted away, freeing
+    slots for the queue."""
+
+    ticket: Ticket
+    n: int
+    cursor: int = 0
+
+
+@dataclasses.dataclass
 class _Wave:
-    """One co-batched group of tickets advancing through segments."""
+    """One co-batched row set advancing through segments.
+
+    Not a lockstep cohort: each part carries its own segment cursor
+    (see :class:`_Part`), ``ServeRuntime._pick_segment`` chooses which
+    cursor group advances next, and rows whose part is frozen for a
+    segment pass through the mixed program untouched.  ``x`` rows are
+    prefix-packed in part order; rows past ``used`` are padding."""
 
     seq: int
     mode: str                            # "plan" | "scan"
@@ -245,18 +288,21 @@ class _Wave:
     plan: object | None                  # TrajectoryPlan for mode == "plan"
     bucket: int                          # padded batch size (warmed)
     x: np.ndarray                        # [bucket, D] fp32 state
-    parts: list                          # [(Ticket, n_rows)] prefix-packed
-    cursor: int = 0                      # next segment index
+    parts: list[_Part]                   # prefix-packed row blocks
     retries: int = 0
     degraded: bool = False
+    degrade_reported: bool = False       # monitor.on_degrade fired once
     running: bool = False
 
     @property
     def used(self) -> int:
-        return sum(n for _, n in self.parts)
+        return sum(p.n for p in self.parts)
 
     def num_segments(self) -> int:
         return self.plan.num_buckets if self.mode == "plan" else 1
+
+    def cursors(self) -> list[int]:
+        return sorted({p.cursor for p in self.parts})
 
 
 class ServeRuntime:
@@ -316,6 +362,7 @@ class ServeRuntime:
         self.counters = {k: 0 for k in (
             "submitted", "completed", "expired", "failed", "retries",
             "finite_trips", "gauss_segments", "oom_splits", "repacks",
+            "joins", "mixed_segments",
             "scan_waves", "exact_waves", "short_waves")}
         # -- observability: bounded latency reservoir (replaces the old
         # unbounded list — O(reservoir) memory no matter the traffic),
@@ -377,17 +424,40 @@ class ServeRuntime:
 
         return self.engine.program(key, build)
 
-    def _segment_grid(self, wave: _Wave) -> tuple[tuple, int, int]:
-        """(ts, start, stop) of the wave's CURRENT segment."""
+    def _mixed_program(self, batch: int, plan, pb, compile_only: bool = False):
+        """Compiled mixed-cursor segment ``fn(x, pos)`` for one
+        (batch bucket, plan bucket): ``sampler.plan_segment_mixed`` with
+        ``pos`` the per-row int32 grid cursors (rows at
+        ``pb.start`` advance; everything else — frozen parts, padding —
+        passes through).  Warmed for every plan variant by ``warmup``,
+        so mixed-cursor waves never compile post-warmup."""
+        shape = (batch, self.eng.store.dim)
+        clip = self.eng.clip_value
+        key = plan_segment_mixed_key(plan, pb, shape, "float32", clip)
+
+        def build():
+            seg = plan_segment_mixed(self.eng.denoiser.call_masked,
+                                     self.eng.schedule, plan, pb, clip)
+            if compile_only:
+                compiled = jax.jit(seg).lower(
+                    jax.ShapeDtypeStruct(shape, jnp.float32),
+                    jax.ShapeDtypeStruct((batch,), jnp.int32)).compile()
+                return lambda xx, pp, _c=compiled: _c(xx, pp)
+            return jax.jit(seg)
+
+        return self.engine.program(key, build)
+
+    def _segment_grid(self, wave: _Wave, seg: int) -> tuple[tuple, int, int]:
+        """(ts, start, stop) of the wave's segment ``seg``."""
         if wave.mode == "plan":
-            b = wave.plan.buckets[wave.cursor]
+            b = wave.plan.buckets[seg]
             return tuple(wave.plan.ts), b.start, b.stop
         ts = tuple(int(t) for t in
                    sampling_timesteps(self.eng.schedule, self.eng.num_steps))
         return ts, 0, len(ts) - 1
 
-    def _run_gauss(self, wave: _Wave, x: np.ndarray) -> np.ndarray:
-        ts, start, stop = self._segment_grid(wave)
+    def _run_gauss(self, wave: _Wave, seg: int, x: np.ndarray) -> np.ndarray:
+        ts, start, stop = self._segment_grid(wave, seg)
         fn = self._gauss_program(wave.bucket, len(ts))
         out = fn(jnp.asarray(x), jnp.asarray(ts, jnp.int32),
                  np.int32(start), np.int32(stop))
@@ -430,6 +500,21 @@ class ServeRuntime:
                                     else jnp.zeros(shape, jnp.float32)),
                             program_cache=self.engine.program,
                             compile_only=aot)
+            # mixed-cursor (continuous-batching) segments: one program
+            # per plan bucket per plan variant — including the primary
+            # plan, whose PLAIN segments eng.warmup() already compiled
+            seen_mix: set[int] = set()
+            for plan in (self.plans.values()
+                         if self.eng.mode == "plan" else ()):
+                if id(plan) in seen_mix:
+                    continue
+                seen_mix.add(id(plan))
+                for pb in plan.buckets:
+                    fn = self._mixed_program(b, plan, pb, compile_only=aot)
+                    if not aot:
+                        jax.block_until_ready(fn(
+                            jnp.zeros(shape, jnp.float32),
+                            jnp.full((b,), pb.start, jnp.int32)))
             for nts in sorted(nts_set):
                 ts = np.arange(nts, dtype=np.int32)[::-1].copy()
                 ts = ts * 0 + 1              # any valid grid; compile only
@@ -510,21 +595,40 @@ class ServeRuntime:
         return "plan", base, self.plans[base], cap
 
     def _admit(self, now: float) -> None:
+        """Seam admission: fill freed slots in in-flight waves first
+        (continuous batching — joined parts start at cursor 0 while
+        their wave-mates keep theirs), then open new waves while the
+        in-flight cap allows.
+
+        ``request.admit`` fires exactly once, at ``submit`` time: a
+        request that waits across many seams is neither re-counted nor
+        re-traced here — joins emit ``wave.join`` and new waves emit
+        ``wave.admit``, so per-request admit metrics stay single-count
+        no matter how many seams it sat through."""
+        if not self._queue:
+            return
+        mode, name, plan, cap = self._pick_rung(now)
+        if self.cfg.continuous and mode == "plan":
+            for w in self._waves:
+                if not self._queue:
+                    return
+                if w.running or w.mode != "plan" or w.plan_name != name:
+                    continue             # never mix plan variants in a wave
+                self._join_wave(w, cap, now)
         while self._queue and len(self._waves) < self.cfg.max_inflight_waves:
-            mode, name, plan, cap = self._pick_rung(now)
-            parts: list = []
+            parts: list[_Part] = []
             used = 0
             while self._queue and \
                     used + self._queue[0].request.num_images <= cap:
                 t = self._queue.pop(0)
                 t.status = "running"
-                parts.append((t, t.request.num_images))
+                parts.append(_Part(t, t.request.num_images))
                 used += t.request.num_images
             if not parts:
                 return                   # head request exceeds current cap
             bucket = self.eng._bucket_for(used)
             keys = self.eng._row_keys(
-                [(t.request, 0, n) for t, n in parts], bucket)
+                [(p.ticket.request, 0, p.n) for p in parts], bucket)
             x = np.asarray(jax.block_until_ready(
                 self.eng._init_noise(keys)), np.float32)
             wave = _Wave(seq=self._seq, mode=mode, plan_name=name,
@@ -543,7 +647,56 @@ class ServeRuntime:
             if tr.enabled:
                 tr.event("wave.admit", wave=wave.seq, mode=mode, plan=name,
                          bucket=bucket, used=used,
-                         requests=[t.request.request_id for t, _ in parts])
+                         requests=[p.ticket.request.request_id
+                                   for p in parts])
+
+    def _join_wave(self, wave: _Wave, cap: int, now: float) -> None:
+        """Admit queued requests into a freed slot of an in-flight wave.
+
+        The joining part starts its own trajectory at cursor 0; its
+        terminal noise comes from the request's own ``fold_in(seed,
+        row)`` stream via the same warmed per-bucket programs solo
+        admission uses, so the rows are bitwise identical to the ones
+        the request would get in a fresh wave.  The wave's batch bucket
+        grows to the smallest warmed bucket that fits (a repack — the
+        mirror image of deadline compaction's shrink)."""
+        joined: list[_Part] = []
+        used = wave.used
+        while self._queue and \
+                used + self._queue[0].request.num_images <= cap:
+            t = self._queue.pop(0)
+            t.status = "running"
+            joined.append(_Part(t, t.request.num_images))
+            used += t.request.num_images
+        if not joined:
+            return
+        tr = obs_trace.tracer()
+        bucket = self.eng._bucket_for(used)
+        if bucket > wave.bucket:
+            x = np.zeros((bucket, wave.x.shape[1]), np.float32)
+            x[: wave.used] = wave.x[: wave.used]
+            self.counters["repacks"] += 1
+            if tr.enabled:
+                tr.event("wave.repack", wave=wave.seq, bucket=bucket,
+                         prev_bucket=wave.bucket, used=wave.used)
+            wave.x, wave.bucket = x, bucket
+        if not wave.x.flags.writeable:   # zero-copy view of a device
+            wave.x = np.array(wave.x)    # buffer: copy before writing
+        ofs = wave.used
+        for p in joined:
+            keys = self.eng._row_keys([(p.ticket.request, 0, p.n)],
+                                      self.eng._bucket_for(p.n))
+            rows = np.asarray(jax.block_until_ready(
+                self.eng._init_noise(keys)), np.float32)[: p.n]
+            wave.x[ofs: ofs + p.n] = rows
+            wave.parts.append(p)
+            self.counters["joins"] += 1
+            if tr.enabled:
+                tr.event("wave.join", wave=wave.seq,
+                         request=p.ticket.request.request_id,
+                         rows=p.n, slot=ofs, cursor=0,
+                         queue_wait_s=now - p.ticket.submitted_at)
+            ofs += p.n
 
     def _pick_wave(self, now: float) -> _Wave | None:
         """Earliest-deadline-first over waves, FIFO on ties."""
@@ -552,16 +705,59 @@ class ServeRuntime:
             return None
 
         def urgency(w: _Wave):
-            exps = [t.expiry for t, _ in w.parts if t.expiry is not None]
+            exps = [p.ticket.expiry for p in w.parts
+                    if p.ticket.expiry is not None]
             return (min(exps) if exps else float("inf"), w.seq)
 
         return min(cands, key=urgency)
 
+    def _pick_segment(self, wave: _Wave) -> int:
+        """Which cursor group advances next: earliest deadline first
+        (deadline correctness dominates), ties to the SMALLEST cursor —
+        catch-up-and-merge scheduling.  Freezing the front group while
+        fresh joiners replay the early buckets lets trailing cursors
+        *reach* leading ones; parts at equal cursors automatically run
+        as one dispatch from then on (``_pos_rows`` activates every
+        part at the picked seam), so converging trajectories coalesce
+        and share all remaining segments.  That coalescing — more rows
+        per dispatch, fewer dispatches per request — is where continuous
+        batching beats wave-at-a-time under sustained load
+        (``benchmarks/serve_throughput.py``); draining the front group
+        first would keep every join in its own private dispatch stream.
+        No group starves: parts only enter at cursor 0, cursors only
+        increase, and a trailing group either merges into the group
+        ahead of it or leaves the wave within ``num_segments`` picks."""
+        if wave.mode != "plan":
+            return 0
+        best, best_key = 0, None
+        for c in wave.cursors():
+            exps = [p.ticket.expiry for p in wave.parts
+                    if p.cursor == c and p.ticket.expiry is not None]
+            k = (min(exps) if exps else float("inf"), c)
+            if best_key is None or k < best_key:
+                best, best_key = c, k
+        return best
+
+    def _pos_rows(self, wave: _Wave, seg: int) -> tuple[np.ndarray,
+                                                        np.ndarray]:
+        """Per-row grid cursors + activity mask for segment ``seg``:
+        ``pos[r]`` is the timestep-grid index row r sits at (its part's
+        bucket seam); rows are active iff that seam is this segment's
+        entry.  Padding rows get -1, which never matches a seam."""
+        pos = np.full((wave.bucket,), -1, np.int32)
+        ofs = 0
+        for p in wave.parts:
+            pos[ofs: ofs + p.n] = wave.plan.buckets[p.cursor].start
+            ofs += p.n
+        return pos, pos == wave.plan.buckets[seg].start
+
     # -- segment execution (outside the lock) ---------------------------------
-    def _segment_fn(self, wave: _Wave):
+    def _segment_fn(self, wave: _Wave, seg: int, mixed: bool):
         if wave.mode == "scan":
             return self.eng._scan_program((wave.bucket, self.eng.store.dim))
-        plan, b = wave.plan, wave.plan.buckets[wave.cursor]
+        plan, b = wave.plan, wave.plan.buckets[seg]
+        if mixed:
+            return self._mixed_program(wave.bucket, plan, b)
         clip = self.eng.clip_value
         key = plan_segment_key(plan, b, (wave.bucket, self.eng.store.dim),
                                "float32", clip)
@@ -583,30 +779,52 @@ class ServeRuntime:
         return "resource_exhausted" in m or "out of memory" in m \
             or "out-of-memory" in m
 
-    def _run_segment(self, wave: _Wave):
-        """Run the wave's current segment with retries, the OOM split
+    def _run_segment(self, wave: _Wave, seg: int):
+        """Run segment ``seg`` of the wave with retries, the OOM split
         escape hatch, and the Gaussian fallback.  Returns
         ``("ok", new_x)`` or ``("split", None)``.  With tracing enabled
-        the whole attempt loop runs inside a ``wave.segment`` span."""
+        the whole attempt loop runs inside a ``wave.segment`` span whose
+        ``cursor``/``active``/``frozen`` tags record which rows advanced
+        (``scripts/trace_latency.py`` reconstructs per-request
+        queue/compute timelines from them)."""
         tr = obs_trace.tracer()
         if not tr.enabled:
-            return self._run_segment_inner(wave, tr)
-        ts, start, stop = self._segment_grid(wave)
-        with tr.span("wave.segment", wave=wave.seq, cursor=wave.cursor,
+            return self._run_segment_inner(wave, seg, tr)
+        ts, start, stop = self._segment_grid(wave, seg)
+        n_act = wave.used
+        if wave.mode == "plan":
+            _, act = self._pos_rows(wave, seg)
+            n_act = int(act[: wave.used].sum())
+        with tr.span("wave.segment", wave=wave.seq, cursor=seg,
                      mode=wave.mode, plan=wave.plan_name,
                      bucket=wave.bucket, used=wave.used,
+                     active=n_act, frozen=wave.used - n_act,
                      start=start, stop=stop):
-            return self._run_segment_inner(wave, tr)
+            return self._run_segment_inner(wave, seg, tr)
 
-    def _run_segment_inner(self, wave: _Wave, tr):
+    def _run_segment_inner(self, wave: _Wave, seg: int, tr):
         x_prev = wave.x
+        mixed = False
+        act = np.ones(wave.bucket, bool)
+        if wave.mode == "plan":
+            pos, act = self._pos_rows(wave, seg)
+            # an aligned wave (every part at this seam) runs the PLAIN
+            # per-bucket program — bit-identical to wave-at-a-time and
+            # to ServeEngine.serve; the mixed program only dispatches
+            # when cursors actually diverge
+            mixed = not bool(act[: wave.used].all())
         attempt = 0
         while True:
             builds0 = self.engine._builds
             try:
-                fn = self._segment_fn(wave)
-                out = np.asarray(jax.block_until_ready(
-                    fn(jnp.asarray(x_prev))), np.float32)
+                if mixed:
+                    fn = self._segment_fn(wave, seg, True)
+                    self.counters["mixed_segments"] += 1
+                    out = fn(jnp.asarray(x_prev), jnp.asarray(pos))
+                else:
+                    fn = self._segment_fn(wave, seg, False)
+                    out = fn(jnp.asarray(x_prev))
+                out = np.asarray(jax.block_until_ready(out), np.float32)
                 if self.engine._builds > builds0 and self._warm:
                     # evict-then-rebuild storms recompile without
                     # changing the cache size; the build counter sees
@@ -633,14 +851,23 @@ class ServeRuntime:
                 if attempt > self.cfg.max_retries:
                     if tr.enabled:
                         tr.event("wave.gauss_fallback", wave=wave.seq,
-                                 cursor=wave.cursor)
-                    out = self._run_gauss(wave, x_prev)
+                                 cursor=seg)
+                    out = self._run_gauss(wave, seg, x_prev)
+                    if wave.mode == "plan":
+                        # frozen rows stay frozen: the Gaussian segment
+                        # ran THIS segment's grid span, which only the
+                        # active rows are at
+                        out = np.where(act[:, None], out, x_prev)
                     wave.degraded = True
                     break
                 self._backoff(attempt)
-        # per-row finite guard: never let NaN/inf cross a seam
+        # per-row finite guard: never let NaN/inf cross a seam.  Frozen
+        # rows are untouched copies of state that already passed this
+        # guard, so only active rows can trip it (and only active rows
+        # may take the Gaussian replacement — it ran this segment's
+        # span, not theirs).
         used = wave.used
-        row_ok = np.isfinite(out[:used]).all(axis=1)
+        row_ok = np.isfinite(out[:used]).all(axis=1) | ~act[:used]
         if not row_ok.all():
             nbad = int((~row_ok).sum())
             self.counters["finite_trips"] += nbad
@@ -649,8 +876,10 @@ class ServeRuntime:
             if tr.enabled:
                 tr.event("wave.finite_trip", wave=wave.seq, rows=nbad)
             self.br_screen.record_failure(self.cfg.clock())
-            gauss = self._run_gauss(wave, x_prev)
+            gauss = self._run_gauss(wave, seg, x_prev)
             bad = np.flatnonzero(~row_ok)
+            if not out.flags.writeable:
+                out = np.array(out)
             out[bad] = gauss[bad]
             wave.degraded = True
         else:
@@ -661,12 +890,13 @@ class ServeRuntime:
     # -- post-segment bookkeeping (under the lock) ----------------------------
     def _split(self, wave: _Wave) -> None:
         """Halve an OOM-ing wave into two waves on warmed smaller
-        buckets, preserving per-ticket row blocks and segment cursor."""
+        buckets, preserving per-ticket row blocks and each part's own
+        segment cursor (children of a mixed-cursor wave stay mixed)."""
         self.counters["oom_splits"] += 1
         half, first, second, acc = wave.used / 2.0, [], [], 0
-        for t, n in wave.parts:
-            (first if acc < half else second).append((t, n))
-            acc += n
+        for p in wave.parts:
+            (first if acc < half else second).append(p)
+            acc += p.n
         if not second:                   # single ticket: move it wholesale
             second = [first.pop()]
         self._waves.remove(wave)
@@ -674,7 +904,7 @@ class ServeRuntime:
         for parts in (first, second):
             if not parts:
                 continue
-            used = sum(n for _, n in parts)
+            used = sum(p.n for p in parts)
             bucket = self.eng._bucket_for(used)
             x = np.zeros((bucket, wave.x.shape[1]), np.float32)
             x[:used] = wave.x[ofs: ofs + used]
@@ -682,104 +912,129 @@ class ServeRuntime:
             self._waves.append(_Wave(
                 seq=self._seq, mode=wave.mode, plan_name=wave.plan_name,
                 plan=wave.plan, bucket=bucket, x=x, parts=parts,
-                cursor=wave.cursor, retries=wave.retries, degraded=True))
+                retries=wave.retries, degraded=True))
             tr = obs_trace.tracer()
             if tr.enabled:
                 tr.event("wave.split", wave=wave.seq, child=self._seq,
                          bucket=bucket, used=used)
             self._seq += 1
 
-    def _deliver(self, wave: _Wave, now: float) -> None:
+    def _deliver_part(self, wave: _Wave, p: _Part, ofs: int,
+                      now: float) -> None:
+        """Deliver one completed part.  The delivery-time deadline check
+        keeps the "completed implies within deadline" invariant; ``ofs``
+        is the part's row slot in the wave (the ``slot`` trace tag)."""
         shape = self.eng.store.image_shape
         tr = obs_trace.tracer()
-        if self.monitor is not None and wave.degraded:
-            self.monitor.on_degrade()
-        ofs = 0
-        for t, n in wave.parts:
-            rows = wave.x[ofs: ofs + n]
-            ofs += n
-            if t.expiry is not None and now > t.expiry:
-                t.status = "expired"     # strict: late even at the end
-                self.counters["expired"] += 1
-                if tr.enabled:
-                    tr.event("request.expire",
-                             request=t.request.request_id, phase="deliver")
-                continue
-            if not np.isfinite(rows).all():     # unreachable by design;
-                t.status = "failed"             # belt over the suspenders
-                self.counters["failed"] += 1
-                if tr.enabled:
-                    tr.event("request.failed",
-                             request=t.request.request_id)
-                continue
-            t.images = rows.reshape((n,) + tuple(shape)).copy()
-            t.latency_s = now - t.submitted_at
-            t.degraded = t.degraded or wave.degraded
-            t.status = "done"
-            self.counters["completed"] += 1
-            self._lat_hist.observe(t.latency_s)
+        t = p.ticket
+        rows = wave.x[ofs: ofs + p.n]
+        if t.expiry is not None and now > t.expiry:
+            t.status = "expired"         # strict: late even at the end
+            self.counters["expired"] += 1
             if tr.enabled:
-                tr.event("request.deliver", request=t.request.request_id,
-                         wave=wave.seq, latency_s=t.latency_s,
-                         degraded=t.degraded)
-        self._waves.remove(wave)
+                tr.event("request.expire",
+                         request=t.request.request_id, phase="deliver")
+            return
+        if not np.isfinite(rows).all():         # unreachable by design;
+            t.status = "failed"                 # belt over the suspenders
+            self.counters["failed"] += 1
+            if tr.enabled:
+                tr.event("request.failed",
+                         request=t.request.request_id)
+            return
+        t.images = rows.reshape((p.n,) + tuple(shape)).copy()
+        t.latency_s = now - t.submitted_at
+        t.degraded = t.degraded or wave.degraded
+        t.status = "done"
+        self.counters["completed"] += 1
+        self._lat_hist.observe(t.latency_s)
+        if tr.enabled:
+            tr.event("request.deliver", request=t.request.request_id,
+                     wave=wave.seq, slot=ofs, latency_s=t.latency_s,
+                     degraded=t.degraded)
 
-    def _post_segment(self, wave: _Wave, result) -> None:
+    def _drop_parts(self, wave: _Wave, drop: set, now: float) -> bool:
+        """Remove parts (by ``id``) from a wave — delivered or expired —
+        compact survivors' rows to the prefix, and repack to the
+        smallest warmed bucket that still fits (slots freed here are
+        what ``_join_wave`` refills at the next seam).  Returns True if
+        the wave emptied and was removed."""
+        alive = [p for p in wave.parts if id(p) not in drop]
+        if not alive:
+            self._waves.remove(wave)
+            return True
+        keep = np.zeros(wave.used, bool)
+        ofs = 0
+        for p in wave.parts:
+            if id(p) not in drop:
+                keep[ofs: ofs + p.n] = True
+            ofs += p.n
+        used = int(keep.sum())
+        bucket = self.eng._bucket_for(used)
+        x = np.zeros((bucket, wave.x.shape[1]), np.float32)
+        x[:used] = wave.x[: len(keep)][keep]
+        if bucket < wave.bucket:
+            self.counters["repacks"] += 1
+            tr = obs_trace.tracer()
+            if tr.enabled:
+                tr.event("wave.repack", wave=wave.seq,
+                         bucket=bucket, prev_bucket=wave.bucket,
+                         used=used)
+        wave.x, wave.bucket, wave.parts = x, bucket, alive
+        return False
+
+    def _post_segment(self, wave: _Wave, seg: int, result) -> None:
         status, out = result
         now = self.cfg.clock()
         if status == "split":
             self._split(wave)
             return
         if self.monitor is not None:
-            ts, start, stop = self._segment_grid(wave)
+            ts, start, stop = self._segment_grid(wave, seg)
             for i in range(start, stop):
                 self.monitor.record_step(int(ts[i]))
             self.monitor.maybe_probe_recall(out[:wave.used],
                                             int(ts[stop - 1]))
         wave.x = out
-        wave.cursor += 1
-        if wave.cursor >= wave.num_segments():
-            self._deliver(wave, now)
-            return
+        nseg = wave.num_segments()
+        for p in wave.parts:
+            if wave.mode != "plan":
+                p.cursor = nseg          # scan: whole trajectory in one go
+            elif p.cursor == seg:
+                p.cursor = seg + 1
+        done_ids, ofs = set(), 0
+        for p in wave.parts:
+            if p.cursor >= nseg:
+                self._deliver_part(wave, p, ofs, now)
+                done_ids.add(id(p))
+            ofs += p.n
+        if done_ids:
+            if wave.degraded and not wave.degrade_reported \
+                    and self.monitor is not None:
+                wave.degrade_reported = True
+                self.monitor.on_degrade()
+            if self._drop_parts(wave, done_ids, now):
+                return
         self._compact_expired(wave, now)
 
     def _compact_expired(self, wave: _Wave, now: float) -> bool:
         """Bucket-seam deadline enforcement: expire deadlined tickets,
         compact survivors to the prefix, repack to a smaller warmed
         bucket when possible.  Returns True if the whole wave died."""
-        alive, dead_rows, ofs = [], [], 0
+        drop: set = set()
         tr = obs_trace.tracer()
-        for t, n in wave.parts:
-            if t.expiry is not None and now > t.expiry:
-                t.status = "expired"
+        for p in wave.parts:
+            if p.ticket.expiry is not None and now > p.ticket.expiry:
+                p.ticket.status = "expired"
                 self.counters["expired"] += 1
-                dead_rows.append((ofs, n))
+                drop.add(id(p))
                 if tr.enabled:
                     tr.event("request.expire",
-                             request=t.request.request_id, phase="seam",
-                             wave=wave.seq)
-            else:
-                alive.append((t, n))
-            ofs += n
-        if dead_rows:
-            if not alive:
-                self._waves.remove(wave)
-                return True
-            keep = np.ones(wave.used, bool)
-            for o, n in dead_rows:
-                keep[o: o + n] = False
-            used = int(keep.sum())
-            bucket = self.eng._bucket_for(used)
-            x = np.zeros((bucket, wave.x.shape[1]), np.float32)
-            x[:used] = wave.x[: len(keep)][keep]
-            if bucket < wave.bucket:
-                self.counters["repacks"] += 1
-                if tr.enabled:
-                    tr.event("wave.repack", wave=wave.seq,
-                             bucket=bucket, prev_bucket=wave.bucket,
-                             used=used)
-            wave.x, wave.bucket, wave.parts = x, bucket, alive
-        return False
+                             request=p.ticket.request.request_id,
+                             phase="seam", wave=wave.seq)
+        if not drop:
+            return False
+        return self._drop_parts(wave, drop, now)
 
     # -- scheduler loop -------------------------------------------------------
     def pump(self) -> bool:
@@ -787,26 +1042,39 @@ class ServeRuntime:
         with self._lock:
             now = self.cfg.clock()
             self._expire_queued(now)
+            # pre-admission seam: rows already past their deadline are
+            # dropped BEFORE admission, so the slots they free (and the
+            # smaller repacked buckets) are joinable at this very seam
+            for w in list(self._waves):
+                if not w.running:
+                    self._compact_expired(w, now)
             self._admit(now)
             wave = self._pick_wave(now)
-            # pre-segment seam: rows already past their deadline are
-            # dropped before any compute is spent on them
-            while wave is not None and self._compact_expired(wave, now):
-                wave = self._pick_wave(now)
             if wave is None:
                 return False
+            seg = self._pick_segment(wave)
             wave.running = True
         try:
-            result = self._run_segment(wave)
+            result = self._run_segment(wave, seg)
         finally:
             with self._lock:
                 wave.running = False
         with self._lock:
-            self._post_segment(wave, result)
+            self._post_segment(wave, seg, result)
         return True
 
     def run_until_idle(self, max_iters: int = 100_000) -> None:
-        """Drain the queue and all in-flight waves inline."""
+        """Drain the queue and all in-flight waves inline.
+
+        Audited for continuous admission: a queue that refills at every
+        seam cannot starve the idle condition, because ``pump`` returns
+        True whenever ANY segment ran — the sleep branch below is
+        reached only when nothing was runnable at all (the head request
+        exceeds a degraded admission cap while no wave has work), never
+        merely because admission kept finding fresh joins.  Each pump
+        that admits also advances a cursor group, and every group is
+        finitely many segments from delivery, so with a finite queue the
+        loop strictly consumes work."""
         for _ in range(max_iters):
             if not self.pump():
                 with self._lock:

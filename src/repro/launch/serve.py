@@ -80,7 +80,30 @@ class Result:
 
 
 class ServeEngine:
-    """Training-free generation service over a fixed dataset store."""
+    """Training-free generation service over a fixed dataset store.
+
+    The synchronous batch layer of the serving stack (the async layer
+    with admission control, deadlines, and continuous batching is
+    :class:`repro.launch.runtime.ServeRuntime`, which wraps a warmed
+    instance of this class).  Owns three serving-specific concerns:
+
+    * **batch buckets** — request waves are padded to the next
+      power-of-two batch size, so the set of compilable batch shapes
+      is logarithmic in ``max_batch``.
+    * **per-request noise streams** — every row draws its terminal
+      noise from ``fold_in(PRNGKey(request.seed), row)``, making
+      outputs bitwise independent of how requests are packed into
+      waves (the property continuous batching relies on).
+    * **AOT warmup** — ``warmup()`` precompiles every (batch bucket x
+      plan bucket x plan variant) program, including the mixed-cursor
+      ``plan_seg_mix`` variants, so serving any request mix afterward
+      compiles nothing (CI-guarded).
+
+    ``plan_threshold`` / ``max_buckets`` forward to
+    :func:`repro.core.plan.build_plan`: lower thresholds give
+    finer-grained plans — more seams for the runtime to admit/expire
+    at, at the cost of more programs to warm (see docs/SERVING.md).
+    """
 
     def __init__(self, dataset: str, dataset_kw: dict | None = None,
                  base: str = "optimal", schedule: str = "ddpm_linear",

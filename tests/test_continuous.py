@@ -1,0 +1,238 @@
+"""Continuous batching (repro/launch/runtime.py): mid-trajectory
+admission at plan-bucket seams.
+
+Pins the three tentpole guarantees:
+
+* solo-vs-co-batched **bitwise parity** — a request admitted into a
+  freed slot mid-trajectory of another wave is bit-identical to the same
+  request served alone (per-row activity masking in
+  ``sampler.plan_segment_mixed`` + per-request ``fold_in(seed, row)``
+  noise streams make placement invisible);
+* seam **interactions** — joins compose with deadline compaction and
+  OOM wave splits at the same seam;
+* an exactly-once **delivery property** over adversarial admission
+  schedules, including single-count ``request.admit`` events for
+  requests that wait across many seams.
+
+Request sizes here are >= 2 rows: one-row batch buckets take a
+different GEMM path (matrix-vector vs matrix-matrix) whose fp32
+reduction order differs, so the bitwise claim is pinned on the >= 2
+buckets where row content is invariant to the batch bucket (the
+compaction-invariance test in test_runtime.py covers the 1-row repack
+at atol 1e-5).
+"""
+import numpy as np
+import pytest
+
+from repro.launch.faults import FaultConfig, injected
+from repro.launch.runtime import RuntimeConfig, ServeRuntime
+from repro.launch.serve import Request, ServeEngine
+from repro.obs.trace import Tracer, set_tracer
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+    def sleep(self, s):
+        self.t += s
+
+
+@pytest.fixture(scope="module")
+def eng():
+    return ServeEngine("gmm", {"n": 512, "dim": 16}, num_steps=6,
+                       max_batch=4)
+
+
+def _fresh(eng, **kw):
+    kw.setdefault("backoff_base_s", 0.001)
+    kw.setdefault("backoff_max_s", 0.005)
+    kw.setdefault("breaker_cooldown_s", 0.2)
+    r = ServeRuntime(eng, RuntimeConfig(**kw))
+    r.warmup()
+    return r
+
+
+# -- tentpole: bitwise parity under mid-trajectory admission -----------------
+
+def test_mid_trajectory_join_bitwise_parity_zero_compiles(eng):
+    """B joins A's in-flight wave at a seam; both must be bitwise equal
+    to serving each alone, with zero post-warmup compiles."""
+    assert eng.plan.num_buckets >= 2
+    r = _fresh(eng)
+    b0 = eng.engine._builds
+    t_a = r.submit(Request(0, 2, seed=11))
+    assert r.pump()                      # A runs segment 0 alone
+    t_b = r.submit(Request(1, 2, seed=12))
+    r.run_until_idle()                   # B joins A's wave at the seam
+    assert t_a.status == "done" and t_b.status == "done"
+    assert r.counters["joins"] == 1
+    assert r.counters["mixed_segments"] >= 1
+    assert eng.engine._builds == b0, "continuous admission compiled"
+    assert r.health()["compiles_post_warmup"] == 0
+    alone = eng.serve([Request(0, 2, seed=11), Request(1, 2, seed=12)],
+                      )
+    solo_a = eng.serve([Request(0, 2, seed=11)])[0]
+    solo_b = eng.serve([Request(1, 2, seed=12)])[0]
+    np.testing.assert_array_equal(t_a.images, solo_a.images)
+    np.testing.assert_array_equal(t_b.images, solo_b.images)
+    # and co-batched-from-the-start serving agrees too (row independence)
+    np.testing.assert_array_equal(alone[0].images, solo_a.images)
+
+
+def test_joiner_advances_first_when_more_urgent(eng):
+    """EDF picks the fresh joiner's cursor group while the older group
+    freezes: the joiner itself runs MIXED segments as the active
+    minority and must still be bitwise equal to solo serving."""
+    r = _fresh(eng)
+    t_a = r.submit(Request(0, 2, seed=21))            # no deadline
+    assert r.pump()
+    t_b = r.submit(Request(1, 2, seed=22, deadline_s=1000.0))
+    mixed0 = r.counters["mixed_segments"]
+    r.run_until_idle()
+    assert t_a.status == "done" and t_b.status == "done"
+    assert r.counters["joins"] == 1
+    assert r.counters["mixed_segments"] > mixed0
+    solo_a = eng.serve([Request(0, 2, seed=21)])[0]
+    solo_b = eng.serve([Request(1, 2, seed=22)])[0]
+    np.testing.assert_array_equal(t_a.images, solo_a.images)
+    np.testing.assert_array_equal(t_b.images, solo_b.images)
+
+
+def test_wave_at_a_time_mode_never_joins(eng):
+    """RuntimeConfig(continuous=False) restores lockstep cohorts (the
+    serve_throughput baseline): same results, zero joins."""
+    r = _fresh(eng, continuous=False)
+    t_a = r.submit(Request(0, 2, seed=31))
+    assert r.pump()
+    t_b = r.submit(Request(1, 2, seed=32))
+    r.run_until_idle()
+    assert t_a.status == "done" and t_b.status == "done"
+    assert r.counters["joins"] == 0
+    assert r.counters["mixed_segments"] == 0
+    np.testing.assert_array_equal(
+        t_b.images, eng.serve([Request(1, 2, seed=32)])[0].images)
+
+
+# -- seam interactions: join + deadline compaction + OOM splits --------------
+
+def test_join_and_deadline_compaction_same_seam(eng):
+    """At one seam: A expires (compacted + repacked), C joins the freed
+    slot in the SAME pump; the survivor B stays bit-identical to
+    serving alone."""
+    clk = FakeClock()
+    r = _fresh(eng, clock=clk, sleep=clk.sleep, max_inflight_waves=1)
+    t_a = r.submit(Request(0, 2, seed=41, deadline_s=5.0))
+    t_b = r.submit(Request(1, 2, seed=42))
+    assert r.pump()                      # A+B run segment 0 (bucket 4)
+    clk.t = 10.0                         # A is now past its deadline
+    t_c = r.submit(Request(2, 2, seed=43))
+    r.run_until_idle()
+    assert t_a.status == "expired" and t_a.images is None
+    assert t_b.status == "done" and t_c.status == "done"
+    assert r.counters["joins"] >= 1
+    np.testing.assert_array_equal(
+        t_b.images, eng.serve([Request(1, 2, seed=42)])[0].images)
+    np.testing.assert_array_equal(
+        t_c.images, eng.serve([Request(2, 2, seed=43)])[0].images)
+
+
+def test_join_then_oom_split_preserves_cursors(eng):
+    """A mixed-cursor wave that OOM-splits keeps each part's cursor:
+    every request still delivers finite images exactly once."""
+    r = _fresh(eng, max_retries=1, breaker_threshold=1)
+    t_a = r.submit(Request(0, 2, seed=51))
+    assert r.pump()
+    t_b = r.submit(Request(1, 2, seed=52))
+    with injected(FaultConfig(seed=7, oom_rate=0.7)):
+        r.run_until_idle()
+    for t in (t_a, t_b):
+        assert t.status == "done", t.status
+        assert np.isfinite(t.images).all()
+    assert r.counters["joins"] >= 1
+    assert r.counters["oom_splits"] >= 1
+
+
+def test_gauss_fallback_freezes_inactive_rows(eng):
+    """Retries exhausted on a MIXED segment: the Gaussian fallback may
+    only replace the active rows — frozen wave-mates pass through and
+    stay exact (bitwise) for their remaining segments."""
+    r = _fresh(eng, max_retries=1)
+    t_a = r.submit(Request(0, 2, seed=61))
+    assert r.pump()                      # A finishes segment 0 cleanly
+    t_b = r.submit(Request(1, 2, seed=62, deadline_s=1000.0))
+    # EDF now runs B's cursor-0 group first (mixed, A frozen); errors
+    # exhaust retries there and Gaussian-fallback B's rows only
+    with injected(FaultConfig(seed=6, error_rate=1.0)):
+        assert r.pump()
+    assert r.counters["gauss_segments"] >= 1
+    r.run_until_idle()
+    assert t_a.status == "done" and t_b.status == "done"
+    assert t_b.degraded and np.isfinite(t_b.images).all()
+    # A never took a degraded segment: exact vs solo
+    assert np.isfinite(t_a.images).all()
+    np.testing.assert_array_equal(
+        t_a.images, eng.serve([Request(0, 2, seed=61)])[0].images)
+
+
+# -- property: every admission schedule delivers exactly once ----------------
+
+def test_any_admission_schedule_delivers_exactly_once(eng):
+    """Randomized submit/pump/expiry interleavings: every ticket reaches
+    exactly one terminal state, images delivered iff done, and
+    ``request.admit`` fires exactly once per request no matter how many
+    seams it waited across (the PR 8 double-count audit)."""
+    for schedule_seed in (0, 1, 2):
+        rng = np.random.default_rng(schedule_seed)
+        clk = FakeClock()
+        r = _fresh(eng, clock=clk, sleep=clk.sleep)
+        tr = Tracer()
+        prev = set_tracer(tr)
+        try:
+            tickets, rid = [], 0
+            for _ in range(8):           # bursts interleaved with pumps
+                for _ in range(int(rng.integers(0, 3))):
+                    dl = (None if rng.random() < 0.5
+                          else float(rng.uniform(0.5, 50.0)))
+                    tickets.append(r.submit(Request(
+                        rid, int(rng.integers(1, 4)), seed=100 + rid,
+                        deadline_s=dl)))
+                    rid += 1
+                for _ in range(int(rng.integers(0, 3))):
+                    r.pump()
+                clk.t += float(rng.uniform(0.0, 1.5))
+            r.run_until_idle()
+        finally:
+            set_tracer(prev)
+        assert len(tickets) == r.counters["submitted"]
+        term = {"done", "expired", "failed"}
+        assert all(t.status in term for t in tickets)
+        done = sum(t.status == "done" for t in tickets)
+        assert done == r.counters["completed"]
+        assert (r.counters["completed"] + r.counters["expired"]
+                + r.counters["failed"]) == r.counters["submitted"]
+        for t in tickets:
+            assert (t.images is not None) == (t.status == "done")
+            if t.images is not None:
+                assert np.isfinite(t.images).all()
+                assert t.images.shape[0] == t.request.num_images
+        admits = [e for e in tr.events()
+                  if e["kind"] == "point" and e["name"] == "request.admit"]
+        per_req = {}
+        for e in admits:
+            per_req[e["tags"]["request"]] = \
+                per_req.get(e["tags"]["request"], 0) + 1
+        assert all(c == 1 for c in per_req.values()), per_req
+        assert len(per_req) == len(tickets)
+        delivers = [e for e in tr.events()
+                    if e["kind"] == "point"
+                    and e["name"] == "request.deliver"]
+        per_del = {}
+        for e in delivers:
+            per_del[e["tags"]["request"]] = \
+                per_del.get(e["tags"]["request"], 0) + 1
+        assert all(c == 1 for c in per_del.values()), per_del
+        assert len(per_del) == done
