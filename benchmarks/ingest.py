@@ -1,0 +1,181 @@
+"""Incremental ingest vs full index rebuild (the store-lifecycle claim).
+
+Measures the cost of getting ``b`` new rows live AND durable via the
+appendable golden store (``repro.index.ingest.StoreLifecycle.append``:
+one fsync'd journal frame + in-place capacity-slot fill — the rows are
+serveable in ``view()`` and crash-recoverable the moment it returns)
+against the only alternative the static layout offers: a full kmeans
+rebuild of the grown store persisted as a fresh epoch.  Both paths end
+in the same place — every row durable on disk and hot-swappable — so
+the pair is apples-to-apples ("rebuild" includes its shape-specific
+kmeans compile exactly as a real rebuild would pay it).  Epoch
+compaction (``commit``) is deferred/amortized over many appends and is
+recorded as an ungated informational cell (``ingest_commit_us``).
+
+Also measures **post-append screening recall**: IVF-probed top-m_t
+around the *appended* rows vs the exact proxy scan on the grown store
+(queries biased to the new rows — the region where bad placement would
+show).  Appends fill nearest-centroid capacity slots (local 2-means
+into spare windows on overflow), so recall must stay >= 0.95 without
+any rebuild.
+
+Emits ``BENCH_ingest.json``: ``ingest/<cfg>/N<n>/ingest_rebuild_us``
+vs ``.../ingest_append_us`` (gated by scripts/check_bench.py:
+append <= 0.2x rebuild, i.e. >= 5x faster) plus ``recall/ingest/...``
+cells (>= 0.95):
+
+  PYTHONPATH=src python -m benchmarks.ingest
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+import time
+
+import numpy as np
+
+from repro.core.dataset import make_store
+from repro.data import gmm
+from repro.index import (IngestConfig, StoreLifecycle, build_index,
+                         screening_recall)
+
+BENCH_JSON = "BENCH_ingest.json"
+
+CONFIGS = (
+    # (kind, n, dim, num_modes, num_clusters)
+    ("quick", 4096, 32, 32, 64),
+    # the acceptance cell: N >= 50k, 10% new rows, append >= 5x rebuild
+    ("scale", 65536, 64, 256, 512),
+)
+NEW_FRAC = 0.10
+
+
+def post_append_recall(ds, ix, new_rows: np.ndarray,
+                       m: int, nprobe: int, seed: int = 0) -> float:
+    """IVF-probed recall@m around the appended region.
+
+    Queries are jittered copies of appended rows; candidates come from
+    the ``nprobe`` nearest windows (spare windows carry +inf centroid
+    norms, so they are never probed); exact baseline is the dense proxy
+    scan over the occupied rows (+inf norm padding screens itself out).
+    """
+    rng = np.random.default_rng(seed)
+    pick = rng.choice(new_rows.shape[0], size=min(32, new_rows.shape[0]),
+                      replace=False)
+    q = new_rows[pick] + 0.1 * rng.standard_normal(
+        (pick.size, new_rows.shape[1])).astype(np.float32)
+
+    pn = np.asarray(ds.proxy_norms)
+    d2_exact = pn[None, :] - 2.0 * (q @ np.asarray(ds.proxy).T)
+    exact_ids = np.argsort(d2_exact, axis=1, kind="stable")[:, :m]
+
+    cent = np.asarray(ix.centroids)
+    cn = np.asarray(ix.centroid_norms)
+    d2c = np.where(np.isfinite(cn), cn, np.inf)[None, :] \
+        - 2.0 * (q @ cent.T)
+    probe = np.argsort(d2c, axis=1, kind="stable")[:, :nprobe]
+
+    l_cap = ix.max_cluster
+    slots = (probe[:, :, None] * l_cap
+             + np.arange(l_cap)[None, None, :]).reshape(q.shape[0], -1)
+    pns = np.asarray(ix.proxy_norms_sorted)
+    ps = np.asarray(ix.proxy_sorted)
+    d2s = np.take(pns, slots) - 2.0 * np.einsum(
+        "qd,qsd->qs", q, ps[slots])
+    top = np.argsort(d2s, axis=1, kind="stable")[:, :m]
+    pos = np.take_along_axis(slots, top, 1)
+    return float(screening_recall(pos, np.take_along_axis(d2s, top, 1),
+                                  np.asarray(ix.perm), exact_ids))
+
+
+def bench_config(kind: str, n: int, dim: int, num_modes: int,
+                 num_clusters: int, rows: list, workdir: str) -> None:
+    base = gmm(n, dim=dim, num_modes=num_modes, spread=0.10,
+               seed=0)._replace(labels=None)
+    b = int(n * NEW_FRAC)
+    # new rows from the same generative process (a later draw)
+    new = np.asarray(gmm(b, dim=dim, num_modes=num_modes, spread=0.10,
+                         seed=1).X)
+
+    index = build_index(base, num_clusters=num_clusters)  # warms kmeans
+    lc = StoreLifecycle.create(os.path.join(workdir, f"{kind}_lc"),
+                               base, index, IngestConfig(),
+                               proxy_factor=1)
+
+    # -- append path: fsync'd journal frame + in-place fill (rows are
+    # live in view() and crash-recoverable when this returns)
+    t0 = time.perf_counter()
+    lc.append(new)
+    t_append = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    lc.commit()                          # deferred compaction (ungated)
+    t_commit = time.perf_counter() - t0
+
+    # -- rebuild path: full kmeans on the grown store + fresh epoch
+    grown = make_store(np.concatenate([np.asarray(base.X), new]),
+                       (dim,), proxy_factor=1)
+    t0 = time.perf_counter()
+    grown_ix = build_index(grown, num_clusters=num_clusters)
+    StoreLifecycle.create(os.path.join(workdir, f"{kind}_rebuild"),
+                          grown, grown_ix, IngestConfig(), proxy_factor=1)
+    t_rebuild = time.perf_counter() - t0
+
+    ds, ix = lc.view()
+    # fractional probe width: 1/8 of windows at scale; the quick cell's
+    # tiny cluster count (64 windows over 32 modes) needs a wider floor
+    # for its top-m to concentrate (full-probe recall is 1.0 exactly)
+    nprobe = max(24, num_clusters // 8)
+    m = max(32, n // 128)
+    recall = post_append_recall(ds, ix, new, m, nprobe)
+
+    rows.append({"kind": kind, "method": "ingest_append_us", "N": n,
+                 "time_per_step_s": t_append, "new_rows": b,
+                 "recall": recall, "nprobe": nprobe, "m": m})
+    rows.append({"kind": kind, "method": "ingest_commit_us", "N": n,
+                 "time_per_step_s": t_commit, "new_rows": b})
+    rows.append({"kind": kind, "method": "ingest_rebuild_us", "N": n,
+                 "time_per_step_s": t_rebuild, "new_rows": b,
+                 "speedup": t_rebuild / t_append})
+
+
+def run(fast: bool = True):
+    rows: list[dict] = []
+    with tempfile.TemporaryDirectory(prefix="bench_ingest_") as workdir:
+        for kind, n, dim, modes, clusters in CONFIGS:
+            bench_config(kind, n, dim, modes, clusters, rows, workdir)
+    sp = {r["kind"]: r["speedup"] for r in rows if "speedup" in r}
+    rc = {r["kind"]: r["recall"] for r in rows if "recall" in r}
+    summary = (f"durable append vs full rebuild at 10% new rows: "
+               + ", ".join(f"{k} {v:.1f}x" for k, v in sp.items())
+               + f" (target >= 5x at N >= 50k); post-append recall "
+               + ", ".join(f"{k} {v:.3f}" for k, v in rc.items())
+               + " (target >= 0.95)")
+    return rows, summary
+
+
+def write_bench_json(rows, path: str = BENCH_JSON) -> None:
+    """Machine-readable record gated by scripts/check_bench.py: the
+    rebuild/append budget pair (append <= 0.2x rebuild) plus recall."""
+    record = {}
+    for r in rows:
+        name = f"ingest/{r['kind']}/N{r['N']}/{r['method']}"
+        record[name] = round(r["time_per_step_s"] * 1e6, 1)
+        if "recall" in r:
+            record[f"recall/ingest/{r['kind']}/N{r['N']}"] = round(
+                r["recall"], 4)
+    with open(path, "w") as f:
+        json.dump(record, f, indent=2, sort_keys=True)
+
+
+def main():
+    rows, summary = run(fast=True)
+    for r in rows:
+        print(r)
+    write_bench_json(rows)
+    print(f"# wrote {BENCH_JSON}")
+    print(f"# {summary}")
+
+
+if __name__ == "__main__":
+    main()

@@ -14,7 +14,7 @@ import time
 import traceback
 
 from benchmarks import (engine_speedup, fig3_sensitivity, fig6_hparams,
-                        index_speedup, roofline, screen_speedup,
+                        index_speedup, ingest, roofline, screen_speedup,
                         serve_latency, serve_resilience,
                         serve_throughput, sharded_speedup,
                         table1_complexity, table2_quality, table3_scale,
@@ -32,6 +32,7 @@ TABLES = {
     "roofline": roofline,
     "engine_speedup": engine_speedup,
     "index_speedup": index_speedup,
+    "ingest": ingest,
     "screen_speedup": screen_speedup,
     "serve_latency": serve_latency,
     "serve_resilience": serve_resilience,

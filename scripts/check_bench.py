@@ -55,6 +55,11 @@ BUDGET_PAIRS = {
     # the same step with tracing off (benchmarks/roofline.py emits the
     # pair into BENCH_engine.json)
     "obs_base_us": ("obs_traced_us", 1.03),
+    # incremental ingest (BENCH_ingest.json, benchmarks/ingest.py):
+    # getting 10% new rows live-and-durable via the appendable store
+    # must stay >= 5x faster than a full kmeans rebuild of the grown
+    # store, i.e. append <= 0.2x the rebuild
+    "ingest_rebuild_us": ("ingest_append_us", 0.2),
     # continuous batching (BENCH_serve.json, benchmarks/
     # serve_throughput.py): at identical flash-crowd offered load,
     # mid-trajectory admission must deliver at least 1.5x lower p99

@@ -85,6 +85,21 @@ rows than the platform's gather/GEMM crossover (``index_mode="auto"``;
 keys extend with (nprobe_t, padded candidate count) so indexed and
 exact programs never collide.
 
+**Epoch hot-swap** (``install_epoch`` / ``set_serving_epoch`` /
+``at_epoch``): every compiled body takes the store/index device arrays
+as a real jit argument (:class:`StoreOperands`, threaded by
+:meth:`GoldDiffEngine.jitter`) instead of closing over them, so the
+operands are *data*, not baked executable constants.  Installing a new
+epoch with the same shapes — what the appendable store lifecycle
+(``repro.index.ingest``) guarantees across appends — reuses every
+compiled program unchanged: a live service grows its golden store with
+**zero post-warmup compiles**.  ``at_epoch`` pins a thread's dispatches
+to one epoch, which is how the serving runtime lets in-flight waves
+finish on the epoch they were admitted under while new waves start on
+the swapped one.  Shapes that do change (a capacity rebuild) need a
+fresh engine, warmed before cutover (``swap_compat`` names the
+mismatch).
+
 **Sharded execution** (``mesh=..., shard_axis=...``): the golden store
 — and, when indexed, the global index's cluster-sorted rows, split at
 CSR window boundaries (``repro.index.shard``) — is data-sharded across
@@ -118,9 +133,12 @@ is one screening implementation in the repo.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import math
+import threading
 import time
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -159,6 +177,34 @@ GATHER_CROSSOVER_FRAC = {"cpu": 0.10, "gpu": 0.35, "tpu": 0.50}
 # either form.  GPU/TPU budgets are conservative HBM-headroom guesses
 # to refine on real hardware.
 SCREEN_MATERIALIZE_BYTES = {"cpu": 1 << 31, "gpu": 1 << 30, "tpu": 1 << 28}
+
+
+class StoreOperands(NamedTuple):
+    """The engine's device operands for ONE store/index epoch.
+
+    Every compiled body receives this pytree as a real jit *argument*
+    (threaded by :meth:`GoldDiffEngine.jitter`) instead of closing over
+    engine attributes — closure constants get baked into the XLA
+    executable, which is exactly what hot-swapping a grown golden store
+    must avoid.  Because the appendable store lifecycle
+    (``repro.index.ingest``) keeps shapes static across appends, a new
+    epoch with the same shapes reuses every compiled program as-is:
+    zero post-warmup compiles on an epoch swap.
+
+    Index fields are ``None`` on unindexed engines (None is empty pytree
+    structure, so indexed/unindexed programs cannot collide).
+    """
+
+    X: Array                        # [N, D] dataset rows (storage dtype)
+    proxy: Array                    # [N, dp] proxy rows (storage dtype)
+    x_norms: Array                  # [N] fp32 ||x||^2
+    proxy_norms: Array              # [N] fp32 ||proxy||^2
+    proxy_sorted: Array | None = None        # [N, dp] cluster-sorted
+    proxy_norms_sorted: Array | None = None  # [N] (+inf marks pad slots)
+    perm: Array | None = None       # [N] sorted row -> dataset id
+    offsets: Array | None = None    # [C+1] CSR window boundaries
+    centroids: Array | None = None  # [C, dp]
+    centroid_norms: Array | None = None      # [C] (+inf on spare windows)
 
 
 def measure_crossover(x: Array, x_norms: Array, batch: int = 8,
@@ -249,21 +295,33 @@ class GoldDiffEngine:
         self.cfg = cfg or GoldDiffConfig()
         self.backend = backend
         self.storage_dtype = storage_dtype
-        # Dataset-side operands, optionally in low-precision storage.
-        X, proxy = store.X, store.proxy
-        if storage_dtype is not None and X.dtype != storage_dtype:
-            X = X.astype(storage_dtype)
-            proxy = proxy.astype(storage_dtype)
-        self.X = X
-        self.proxy = proxy
-        # Norms always fp32, from the master copy (exact even under bf16).
-        self.x_norms = store.x_norms.astype(jnp.float32)
-        self.proxy_norms = store.proxy_norms.astype(jnp.float32)
+        n = store.n
+        # -- Golden Index (clustered, time-aware coarse screening)
+        if index is not None and index.n != n:
+            raise ValueError(f"index built for N={index.n}, store has N={n}")
+        self.index = index
+        self.index_mode = index_mode
+        self.probe_schedule = probe_schedule or ProbeSchedule()
+        if index is not None:
+            # ascending-occupancy cumsum: worst-case row count held by
+            # any P probed windows (the nprobe occupancy floor).  Host
+            # constant — ``install_epoch`` requires identical offsets,
+            # so it stays valid across epoch swaps.
+            self._occ_cum = np.cumsum(np.sort(np.diff(
+                np.asarray(index.offsets))))
+        self._nprobe: dict[int, int] = {}
+        # -- epoch-swappable store operands (see StoreOperands): the
+        # construction store/index become epoch 0.  ``self.X`` etc. are
+        # *properties* resolving through the current epoch (or, inside a
+        # traced body, through the operands ``jitter`` threaded in).
+        self._tls = threading.local()
+        self._epochs: dict[int, StoreOperands] = {
+            0: self._make_operands(store, index)}
+        self._serving_epoch = 0
         # -- streamed-vs-materialized exact screening (build-time policy)
         self.screen = screen
         self.screen_tile = int(screen_tile)
         # -- per-platform gather-vs-dense strategy (build-time selection)
-        n = store.n
         platform = jax.default_backend()
         self._screen_budget = SCREEN_MATERIALIZE_BYTES.get(platform, 1 << 31)
         if strategy == "measure":
@@ -277,27 +335,6 @@ class GoldDiffEngine:
             m_max_frac = self.cfg.sizes(n)[1] / n
             self.strategy = ("gather" if m_max_frac <= self.crossover_frac
                              else "dense")
-        # -- Golden Index (clustered, time-aware coarse screening)
-        if index is not None and index.n != n:
-            raise ValueError(f"index built for N={index.n}, store has N={n}")
-        self.index = index
-        self.index_mode = index_mode
-        self.probe_schedule = probe_schedule or ProbeSchedule()
-        if index is not None:
-            # Only the PROXY side lives in cluster-sorted order (the
-            # index already materializes it); X is addressed through
-            # ``index.perm`` — one [B, R] int gather — instead of
-            # duplicating the whole [N, D] store in sorted order.
-            ps = index.proxy_sorted
-            if storage_dtype is not None and ps.dtype != storage_dtype:
-                ps = ps.astype(storage_dtype)
-            self.proxy_sorted = ps
-            self.proxy_norms_sorted = index.proxy_norms_sorted
-            # ascending-occupancy cumsum: worst-case row count held by
-            # any P probed windows (the nprobe occupancy floor)
-            self._occ_cum = np.cumsum(np.sort(np.diff(
-                np.asarray(index.offsets))))
-        self._nprobe: dict[int, int] = {}
         # -- sharded execution (data-sharded store over one mesh axis)
         self.mesh = mesh
         self.shard_axis = shard_axis
@@ -317,6 +354,220 @@ class GoldDiffEngine:
         # segment dispatch to detect post-warmup compiles (a cache-size
         # delta misses evict-then-rebuild recompile storms)
         self._builds = 0
+
+    # -- epoch-swappable store operands ---------------------------------------
+    def _make_operands(self, store: DatasetStore,
+                       index: GoldenIndex | None) -> StoreOperands:
+        """Device operands for one (store, index) epoch.
+
+        Dataset-side operands optionally drop to low-precision storage;
+        norms always stay fp32, computed from the master copy (exact
+        even under bf16).  Only the PROXY side lives in cluster-sorted
+        order (the index already materializes it); X is addressed
+        through ``perm`` — one [B, R] int gather — instead of
+        duplicating the whole [N, D] store in sorted order.
+        """
+        sd = self.storage_dtype
+        X, proxy = store.X, store.proxy
+        if sd is not None and X.dtype != sd:
+            X = X.astype(sd)
+            proxy = proxy.astype(sd)
+        kw = {}
+        if index is not None:
+            ps = index.proxy_sorted
+            if sd is not None and ps.dtype != sd:
+                ps = ps.astype(sd)
+            kw = dict(proxy_sorted=ps,
+                      proxy_norms_sorted=index.proxy_norms_sorted
+                      .astype(jnp.float32),
+                      perm=index.perm, offsets=index.offsets,
+                      centroids=index.centroids,
+                      centroid_norms=index.centroid_norms)
+        return StoreOperands(X=X, proxy=proxy,
+                             x_norms=store.x_norms.astype(jnp.float32),
+                             proxy_norms=store.proxy_norms
+                             .astype(jnp.float32), **kw)
+
+    def _operands(self) -> StoreOperands:
+        """Operand resolution order: the pytree bound by an in-flight
+        ``jitter`` trace (tracers), else the pinned/serving epoch."""
+        bound = getattr(self._tls, "bound", None)
+        if bound is not None:
+            return bound
+        return self._epochs[self.call_epoch]
+
+    @property
+    def call_epoch(self) -> int:
+        """Epoch the *next* dispatch resolves operands from: the epoch
+        pinned by an enclosing :meth:`at_epoch` (how in-flight serving
+        waves finish on the epoch they were admitted under), else the
+        serving epoch."""
+        pinned = getattr(self._tls, "pinned", None)
+        return self._serving_epoch if pinned is None else pinned
+
+    @property
+    def serving_epoch(self) -> int:
+        return self._serving_epoch
+
+    # operand views (read-only; resolve per-epoch, or to tracers inside
+    # a jitter-traced body)
+    @property
+    def X(self) -> Array:
+        return self._operands().X
+
+    @property
+    def proxy(self) -> Array:
+        return self._operands().proxy
+
+    @property
+    def x_norms(self) -> Array:
+        return self._operands().x_norms
+
+    @property
+    def proxy_norms(self) -> Array:
+        return self._operands().proxy_norms
+
+    @property
+    def proxy_sorted(self) -> Array:
+        return self._operands().proxy_sorted
+
+    @property
+    def proxy_norms_sorted(self) -> Array:
+        return self._operands().proxy_norms_sorted
+
+    @property
+    def index_perm(self) -> Array:
+        return self._operands().perm
+
+    def swap_compat(self, store: DatasetStore,
+                    index: GoldenIndex | None) -> str | None:
+        """Can ``(store, index)`` hot-swap into this engine's compiled
+        programs?  Returns None when compatible, else a human-readable
+        reason.
+
+        Compatibility = every *static* ingredient of a compiled program
+        (and of the host-side per-timestep constants) is unchanged:
+        array shapes, indexed-ness, cluster count, padded probe width,
+        and the CSR offsets themselves (they feed the static nprobe
+        occupancy floor).  The appendable store lifecycle
+        (``repro.index.ingest``) is built to preserve all of these
+        across appends; a capacity rebuild changes them and needs a
+        fresh engine (warmed before cutover by the caller).
+        """
+        if self.mesh is not None:
+            return ("sharded engines do not hot-swap (the mesh layout "
+                    "bakes per-shard arrays; rebuild the engine)")
+        if (store.n, store.dim) != (self.store.n, self.store.dim):
+            return (f"store shape ({store.n}, {store.dim}) != engine's "
+                    f"({self.store.n}, {self.store.dim})")
+        if (index is None) != (self.index is None):
+            return "indexed-ness differs from the engine's"
+        if index is not None:
+            if index.num_clusters != self.index.num_clusters:
+                return (f"num_clusters {index.num_clusters} != "
+                        f"{self.index.num_clusters}")
+            if index.max_cluster != self.index.max_cluster:
+                return (f"max_cluster {index.max_cluster} != "
+                        f"{self.index.max_cluster}")
+            if not np.array_equal(np.asarray(index.offsets),
+                                  np.asarray(self.index.offsets)):
+                return ("CSR offsets differ (the static nprobe "
+                        "occupancy floor depends on them)")
+        return None
+
+    def install_epoch(self, epoch: int, store: DatasetStore,
+                      index: GoldenIndex | None = None) -> None:
+        """Install ``(store, index)`` as a standby epoch.
+
+        Shapes must match the construction epoch (``swap_compat``) —
+        same shapes means every already-compiled program serves the new
+        operands unmodified, so the swap costs zero compiles.  The
+        serving epoch is unchanged until :meth:`set_serving_epoch`.
+        """
+        reason = self.swap_compat(store, index)
+        if reason is not None:
+            raise ValueError(f"epoch {epoch} cannot hot-swap: {reason}")
+        self._epochs[int(epoch)] = self._make_operands(store, index)
+
+    def set_serving_epoch(self, epoch: int) -> None:
+        if int(epoch) not in self._epochs:
+            raise KeyError(f"epoch {epoch} is not installed "
+                           f"(have {sorted(self._epochs)})")
+        self._serving_epoch = int(epoch)
+
+    def retire_epoch(self, epoch: int) -> None:
+        """Drop a standby epoch's operands (frees device memory)."""
+        if int(epoch) == self._serving_epoch:
+            raise ValueError(f"cannot retire the serving epoch {epoch}")
+        self._epochs.pop(int(epoch), None)
+
+    @contextlib.contextmanager
+    def at_epoch(self, epoch: int):
+        """Pin dispatches in this thread to ``epoch``'s operands (the
+        serving runtime wraps each wave's segment in this, so in-flight
+        waves finish on the epoch they were admitted under)."""
+        prev = getattr(self._tls, "pinned", None)
+        self._tls.pinned = int(epoch)
+        try:
+            yield
+        finally:
+            self._tls.pinned = prev
+
+    def current_operands(self) -> StoreOperands:
+        return self._epochs[self.call_epoch]
+
+    @staticmethod
+    def _ops_sig(ops_: StoreOperands) -> tuple:
+        return tuple(None if a is None else (tuple(a.shape), str(a.dtype))
+                     for a in ops_)
+
+    def jitter(self, fn, aot_specs: tuple | None = None):
+        """Epoch-aware ``jax.jit``: compile ``fn`` with the store
+        operands threaded as real arguments, not baked constants.
+
+        The returned callable has ``fn``'s own signature; at each call
+        it resolves the current (or ``at_epoch``-pinned) epoch's
+        operands and passes them positionally, so one compiled
+        executable serves every installed epoch with the same shapes.
+        Inside the traced body the engine's operand properties resolve
+        to the threaded tracers (thread-local bind), which is why the
+        pipeline-stage methods need no signature changes.
+
+        ``aot_specs`` (a tuple of ``ShapeDtypeStruct``) AOT-lowers for
+        those input avals immediately — the serving warmup path.  AOT
+        executables are cached per operand-shape signature; an epoch
+        whose shapes were never lowered falls back to a fresh compile,
+        counted in ``_builds`` so the post-warmup recompile guard stays
+        honest.  Sharded engines return plain ``jax.jit`` (their
+        operands live in the mesh layout; they do not hot-swap).
+        """
+        if self.mesh is not None:
+            return jax.jit(fn)
+
+        def traced(ops_, *args):
+            self._tls.bound = ops_
+            try:
+                return fn(*args)
+            finally:
+                self._tls.bound = None
+
+        jf = jax.jit(traced)
+        if aot_specs is None:
+            return lambda *args: jf(self.current_operands(), *args)
+        ops0 = self.current_operands()
+        execs = {self._ops_sig(ops0): jf.lower(ops0, *aot_specs).compile()}
+
+        def call(*args):
+            ops_ = self.current_operands()
+            sig = self._ops_sig(ops_)
+            compiled = execs.get(sig)
+            if compiled is None:         # changed-shape epoch: honest
+                self._builds += 1        # post-warmup compile accounting
+                compiled = jf.lower(ops_, *aot_specs).compile()
+                execs[sig] = compiled
+            return compiled(ops_, *args)
+
+        return call
 
     # -- precomputed per-timestep constants ----------------------------------
     def sizes(self, t: int) -> tuple[int, int]:
@@ -479,12 +730,12 @@ class GoldDiffEngine:
         Returns ``(pos, d2)`` with positions in **cluster-sorted** row
         space (+inf ``d2`` marks slots beyond the probed capacity).
         """
-        ix = self.index
-        return ops.ivf_screen(self._proxy_query(q), self.proxy_sorted,
-                              self.proxy_norms_sorted, ix.offsets,
-                              ix.centroids, ix.centroid_norms, m,
-                              nprobe_max, ix.max_cluster, nprobe=nprobe,
-                              backend=self.backend)
+        o = self._operands()
+        return ops.ivf_screen(self._proxy_query(q), o.proxy_sorted,
+                              o.proxy_norms_sorted, o.offsets,
+                              o.centroids, o.centroid_norms, m,
+                              nprobe_max, self.index.max_cluster,
+                              nprobe=nprobe, backend=self.backend)
 
     def _select_body(self, q: Array, t: int) -> tuple[Array, Array]:
         """(idx, d2) of the golden support for a rescaled query (static
@@ -494,7 +745,7 @@ class GoldDiffEngine:
         if self.use_index(t):
             mp = self.padded_m(t)
             pos, pd2 = self.coarse_indexed(q, mp, self.nprobe(t))
-            cand = self.index.perm[pos]
+            cand = self.index_perm[pos]
             return ops.golden_rerank(q, self.X, cand, min(k_t, mp),
                                      x_norms=self.x_norms,
                                      backend=self.backend,
@@ -757,7 +1008,7 @@ class GoldDiffEngine:
             return body()(x_t)
         b0 = self._builds
         fn = self.program(self._key("select", t, x_t, self._index_sig(t)),
-                          lambda: jax.jit(body()))
+                          lambda: self.jitter(body()))
         if not obs_trace.tracer().enabled:
             return fn(x_t)
         return self._traced("select", t, x_t, fn, self._builds > b0)
@@ -773,7 +1024,7 @@ class GoldDiffEngine:
             return body()(x_t)
         b0 = self._builds
         fn = self.program(self._key("denoise", t, x_t, self._index_sig(t)),
-                          lambda: jax.jit(body()))
+                          lambda: self.jitter(body()))
         if not obs_trace.tracer().enabled:
             return fn(x_t)
         return self._traced("denoise", t, x_t, fn, self._builds > b0)
@@ -875,7 +1126,7 @@ class GoldDiffEngine:
             m_pad = p_pad * self.index.max_cluster
             nprobe_t = self._masked_nprobe_t(g, m_t, k_t, p_pad)
             pos, pd2 = self.coarse_indexed(q, m_pad, p_pad, nprobe=nprobe_t)
-            cand = self.index.perm[pos]
+            cand = self.index_perm[pos]
             cand_mask = jnp.isfinite(pd2)
             strategy = "gather"          # dense [B, N] math would void
         else:                            # the index's sublinear coarse
@@ -917,7 +1168,7 @@ class GoldDiffEngine:
             return body(x_t)
         b0 = self._builds
         fn = self.program(self._key("full_scan", t, x_t),
-                          lambda: jax.jit(body))
+                          lambda: self.jitter(body))
         if not obs_trace.tracer().enabled:
             return fn(x_t)
         return self._traced("full_scan", t, x_t, fn, self._builds > b0)

@@ -165,7 +165,7 @@ class GoldDiff:
         fn = self.engine.program(
             self.engine._key(("wrap", self.base.name), t, x_t,
                              self.engine._index_sig(t)),
-            lambda: jax.jit(lambda x: self.base(
+            lambda: self.engine.jitter(lambda x: self.base(
                 x, t, support=self.engine._select_ids_body(x / a, t))))
         return fn(x_t)
 

@@ -197,7 +197,8 @@ def sample_plan(denoise_masked: Callable, schedule: Schedule, shape: tuple,
                 rng: jax.Array, plan, clip_value: float | None = 3.0,
                 x_init: Array | None = None,
                 program_cache: Callable | None = None,
-                compile_only: bool = False) -> Array | None:
+                compile_only: bool = False,
+                jitter: Callable | None = None) -> Array | None:
     """Bucketed DDIM: one ``lax.scan`` segment per plan bucket.
 
     ``denoise_masked`` must accept ``(x, t, caps)`` (e.g.
@@ -222,6 +223,13 @@ def sample_plan(denoise_masked: Callable, schedule: Schedule, shape: tuple,
     ``warmup()`` path — and returns None.  The cached entries are the
     compiled executables, so subsequent real calls (same shape/dtype
     key) run without touching the compiler.
+
+    ``jitter`` (e.g. ``GoldDiffEngine.jitter``) replaces the plain
+    ``jax.jit`` wrapping of each segment with the engine's
+    operands-as-arguments wrapper, which is what makes the compiled
+    segments *epoch-portable*: after a same-shape store hot-swap the
+    identical executables keep running against the new operands with
+    zero recompiles.  Omit it for denoisers with no engine behind them.
     """
     def make_segment(bucket):
         return plan_segment(denoise_masked, schedule, plan, bucket,
@@ -238,9 +246,12 @@ def sample_plan(denoise_masked: Callable, schedule: Schedule, shape: tuple,
         for bucket in plan.buckets:
             seg = make_segment(bucket)
 
-            def build(s=seg):
-                compiled = jax.jit(s).lower(spec).compile()
-                return lambda xx, _c=compiled: _c(xx)
+            if jitter is not None:
+                build = (lambda s=seg: jitter(s, aot_specs=(spec,)))
+            else:
+                def build(s=seg):
+                    compiled = jax.jit(s).lower(spec).compile()
+                    return lambda xx, _c=compiled: _c(xx)
 
             program_cache(seg_key(bucket, shape, "float32"), build)
         return None
@@ -248,13 +259,14 @@ def sample_plan(denoise_masked: Callable, schedule: Schedule, shape: tuple,
     rng, init = jax.random.split(rng)       # match sample()'s key schedule
     x = _init_noise(schedule, int(plan.ts[0]), shape, init, x_init)
     tr = obs_trace.tracer()
+    jj = jitter if jitter is not None else jax.jit
     for bi, bucket in enumerate(plan.buckets):
         seg = make_segment(bucket)
         if program_cache is None:
             fn = seg
         else:
             fn = program_cache(seg_key(bucket, x.shape, str(x.dtype)),
-                               lambda s=seg: jax.jit(s))
+                               lambda s=seg: jj(s))
         if not tr.enabled:
             x = fn(x)
             continue

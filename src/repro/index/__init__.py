@@ -40,12 +40,17 @@ of a mesh axis at CSR window boundaries, which is how
 the single-host probe set (not merely close to it).
 """
 from repro.index.build import kmeans, kmeans_plusplus
+from repro.index.ingest import IngestConfig, StoreLifecycle
 from repro.index.schedule import ProbeSchedule
 from repro.index.shard import ShardedLayout, partition_windows, shard_layout
-from repro.index.store import (GoldenIndex, build_index, load_index,
-                               save_index, screening_recall)
+from repro.index.store import (GoldenIndex, StoreCapacityError,
+                               StoreCorruptionError, StoreError,
+                               StoreVersionError, build_index, load_index,
+                               save_index, screening_recall, validate_index)
 
 __all__ = ["GoldenIndex", "build_index", "save_index", "load_index",
            "kmeans", "kmeans_plusplus", "ProbeSchedule",
            "ShardedLayout", "partition_windows", "shard_layout",
-           "screening_recall"]
+           "screening_recall", "validate_index", "StoreError",
+           "StoreCorruptionError", "StoreVersionError",
+           "StoreCapacityError", "IngestConfig", "StoreLifecycle"]

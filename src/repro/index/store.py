@@ -126,14 +126,131 @@ def screening_recall(pos, d2, perm, exact_ids) -> float:
         for b in range(exact.shape[0])]))
 
 
+# -- persistence (atomic, versioned, checksummed) ----------------------------
+
+INDEX_FORMAT = "golden-index"
+INDEX_FORMAT_VERSION = 1
+
+_ARRAY_FIELDS = tuple(f for f in GoldenIndex._fields if f != "max_cluster")
+
+
+class StoreError(Exception):
+    """Base class for golden-store persistence/lifecycle failures."""
+
+
+class StoreCorruptionError(StoreError):
+    """On-disk store bytes are damaged or internally inconsistent
+    (truncation, bit-flip, torn write, broken CSR invariants)."""
+
+
+class StoreVersionError(StoreError):
+    """On-disk store was written by an incompatible format version."""
+
+
+class StoreCapacityError(StoreError):
+    """An append exceeded the capacity-padded layout (no free slot /
+    no spare window left) — a full rebuild is required to grow."""
+
+
+def validate_index(fields: dict[str, np.ndarray], max_cluster: int) -> None:
+    """Validate GoldenIndex array invariants; raise StoreCorruptionError.
+
+    Checks presence already happened (the manifest layer); this is the
+    *semantic* layer: dtypes the kernels require, CSR well-formedness
+    (offsets sorted, spanning exactly the sorted rows, no window wider
+    than ``max_cluster``), and the permutation being a bijection over
+    the selectable (finite proxy-norm) rows — capacity-padding slots
+    (+inf norms) only need in-range values, they are masked out of
+    every selection downstream.
+    """
+    cents = fields["centroids"]
+    cnorm = fields["centroid_norms"]
+    perm = fields["perm"]
+    offsets = fields["offsets"]
+    ps = fields["proxy_sorted"]
+    pns = fields["proxy_norms_sorted"]
+
+    def bad(msg: str):
+        raise StoreCorruptionError(f"golden index invalid: {msg}")
+
+    for name, arr, nd in (("centroids", cents, 2), ("centroid_norms",
+                          cnorm, 1), ("perm", perm, 1), ("offsets",
+                          offsets, 1), ("proxy_sorted", ps, 2),
+                          ("proxy_norms_sorted", pns, 1)):
+        if arr.ndim != nd:
+            bad(f"{name} must be {nd}-D, got shape {arr.shape}")
+    for name, arr in (("perm", perm), ("offsets", offsets)):
+        if not np.issubdtype(arr.dtype, np.integer):
+            bad(f"{name} must be an integer array, got {arr.dtype}")
+    n = perm.shape[0]
+    c = cents.shape[0]
+    if cnorm.shape[0] != c:
+        bad(f"centroid_norms has {cnorm.shape[0]} entries for "
+            f"{c} centroids")
+    if ps.shape != (n, cents.shape[1]):
+        bad(f"proxy_sorted shape {ps.shape} != ({n}, {cents.shape[1]})")
+    if pns.shape[0] != n:
+        bad(f"proxy_norms_sorted has {pns.shape[0]} entries for {n} rows")
+    if offsets.shape[0] != c + 1:
+        bad(f"offsets has {offsets.shape[0]} entries for {c} windows "
+            f"(want C+1 = {c + 1})")
+    if n and (offsets[0] != 0 or offsets[-1] != n):
+        bad(f"offsets must span [0, {n}], got "
+            f"[{int(offsets[0])}, {int(offsets[-1])}]")
+    sizes = np.diff(offsets.astype(np.int64))
+    if (sizes < 0).any():
+        w = int(np.argmax(sizes < 0))
+        bad(f"offsets not sorted (window {w} has negative size "
+            f"{int(sizes[w])})")
+    if int(max_cluster) < (int(sizes.max()) if sizes.size else 0):
+        bad(f"max_cluster {int(max_cluster)} < widest window "
+            f"{int(sizes.max())}")
+    if n and ((perm < 0).any() or (perm >= n).any()):
+        bad(f"perm has out-of-range entries (valid range [0, {n}))")
+    if np.isnan(cnorm).any() or np.isnan(pns).any():
+        bad("NaN in centroid_norms / proxy_norms_sorted (norms must be "
+            "finite, or +inf on padding slots)")
+    # bijection over selectable rows: every real (finite-norm) slot maps
+    # to a distinct dataset id.  On immutable indexes every slot is real,
+    # so this is the full-permutation check.
+    real = np.isfinite(pns)
+    real_ids = perm[real]
+    if real_ids.size != np.unique(real_ids).size:
+        bad("perm is not a bijection: duplicate dataset ids among "
+            "selectable rows")
+
+
 def save_index(index: GoldenIndex, path: str) -> None:
-    np.savez(path, **{f: np.asarray(getattr(index, f))
-                      for f in GoldenIndex._fields})
+    """Atomic, checksummed save: ``<path>`` (npz) + a JSON manifest
+    sidecar ``<path>.manifest.json`` (format version, shape/dtype
+    schema, per-array sha256).  See ``repro.utils.atomic``."""
+    from repro.utils import atomic
+    arrays = {f: np.asarray(getattr(index, f)) for f in _ARRAY_FIELDS}
+    atomic.save_arrays(path, arrays, fmt=INDEX_FORMAT,
+                       version=INDEX_FORMAT_VERSION,
+                       meta={"max_cluster": int(index.max_cluster)})
 
 
 def load_index(path: str) -> GoldenIndex:
-    with np.load(path) as z:
-        fields = {f: z[f] for f in GoldenIndex._fields}
-    fields["max_cluster"] = int(fields["max_cluster"])
-    return GoldenIndex(**{f: v if f == "max_cluster" else jnp.asarray(v)
-                          for f, v in fields.items()})
+    """Validated load: manifest/version/checksum checks, then the CSR
+    and permutation invariants — all BEFORE construction, so damage
+    surfaces as a typed :class:`StoreCorruptionError` /
+    :class:`StoreVersionError` instead of NaNs (or an obscure
+    AttributeError) deep inside an engine build."""
+    from repro.utils import atomic
+    arrays, meta = atomic.load_arrays(
+        path, fmt=INDEX_FORMAT, version=INDEX_FORMAT_VERSION,
+        corruption_exc=StoreCorruptionError,
+        version_exc=StoreVersionError)
+    missing = sorted(set(_ARRAY_FIELDS) - set(arrays))
+    if missing:
+        raise StoreCorruptionError(
+            f"{path}: manifest is missing required index array(s): "
+            f"{missing}")
+    if "max_cluster" not in meta:
+        raise StoreCorruptionError(f"{path}: manifest meta is missing "
+                                   f"'max_cluster'")
+    max_cluster = int(meta["max_cluster"])
+    validate_index(arrays, max_cluster)
+    return GoldenIndex(max_cluster=max_cluster,
+                       **{f: jnp.asarray(arrays[f]) for f in _ARRAY_FIELDS})

@@ -232,3 +232,73 @@ def injected(config: FaultConfig):
         yield injector
     finally:
         uninstall()
+
+
+# -- on-disk store corruption (crash / bit-rot simulation) --------------------
+#
+# The dispatch-hook faults above attack the *compute* path; these attack
+# the *persistence* path: each injector deterministically damages one
+# on-disk golden-store artifact the way a real failure would, so the
+# chaos suite can assert that every regime surfaces as a typed load
+# error (StoreCorruptionError / StoreVersionError) or a quarantined
+# epoch — never as silent garbage served to a request.
+
+STORE_CORRUPTIONS = ("truncate", "bitflip", "stale_manifest", "torn_rename")
+
+
+def corrupt_store(npz_path: str, kind: str, seed: int = 0) -> str:
+    """Deterministically damage one persisted artifact.
+
+    ``npz_path`` is the arrays file (its manifest sidecar is
+    ``<npz_path>.manifest.json``); ``kind``:
+
+    * ``truncate``       — cut the npz to 60% of its bytes (a crash
+      mid-write / partial copy);
+    * ``bitflip``        — flip one bit at a seed-chosen offset (media
+      rot; the per-array sha256 must catch it);
+    * ``stale_manifest`` — bump the manifest's format version (an
+      artifact from an incompatible future writer);
+    * ``torn_rename``    — overwrite npz bytes while leaving the
+      manifest untouched (the rename landed but the content belongs to
+      a different write — checksum mismatch).
+
+    Returns a short description of what was done (for test output).
+    """
+    import json
+    import os
+
+    manifest = npz_path + ".manifest.json"
+    if kind == "truncate":
+        size = os.path.getsize(npz_path)
+        keep = max(1, (size * 6) // 10)
+        with open(npz_path, "rb+") as f:
+            f.truncate(keep)
+        return f"truncated {npz_path} from {size} to {keep} bytes"
+    if kind == "bitflip":
+        with open(npz_path, "rb+") as f:
+            data = bytearray(f.read())
+            ofs = int(unit_uniform(seed, 0, 0x51) * len(data)) % len(data)
+            data[ofs] ^= 1 << (int(unit_uniform(seed, 1, 0x52) * 8) % 8)
+            f.seek(0)
+            f.write(data)
+        return f"flipped one bit at offset {ofs} of {npz_path}"
+    if kind == "stale_manifest":
+        with open(manifest) as f:
+            m = json.load(f)
+        m["format_version"] = int(m.get("format_version", 1)) + 1
+        with open(manifest, "w") as f:
+            json.dump(m, f)
+        return f"bumped {manifest} to version {m['format_version']}"
+    if kind == "torn_rename":
+        # a structurally valid npz whose content belongs to a DIFFERENT
+        # write (same schema, different bytes) lands under the old
+        # manifest: only the per-array sha256 can catch it
+        with np.load(npz_path) as z:
+            shapes = {k: (z[k].shape, z[k].dtype) for k in z.files}
+        np.savez(npz_path, **{k: np.full(s, 0.5, dt) if
+                              np.issubdtype(dt, np.floating)
+                              else np.ones(s, dt) + 1
+                              for k, (s, dt) in shapes.items()})
+        return f"replaced {npz_path} content under its old manifest"
+    raise ValueError(f"unknown store corruption {kind!r} "
+                     f"(have {STORE_CORRUPTIONS})")

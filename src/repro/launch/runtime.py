@@ -62,6 +62,19 @@ admission / scheduling / failure machinery a service actually needs:
 * **finite-output guard** — after every segment, rows that went
   non-finite are replaced with the Gaussian-fallback segment of the
   same rows (never delivered as NaN; trips the ``screen`` breaker).
+* **zero-downtime hot-swap** — ``hot_swap(store, index)`` installs a
+  new golden-store epoch (same shapes: the appendable lifecycle's
+  capacity-padded invariant) into the warmed engine, probes it with an
+  already-compiled segment on a throwaway input, and flips the serving
+  epoch under the scheduler lock.  In-flight waves carry the epoch they
+  were admitted under (``_Wave.epoch``; every segment dispatch is
+  pinned via ``engine.at_epoch``), so a swap mid-trajectory changes
+  nothing for running requests — and because compiled programs take the
+  store operands as *arguments* (``engine.jitter``), the flip costs
+  zero recompiles.  A probe failure (non-finite output or an executor
+  error) quarantines the candidate epoch instead of serving it: the
+  old epoch keeps serving, ``epoch_quarantined`` increments, and the
+  swap raises :class:`EpochProbeError`.
 * **observability** — ``health()`` snapshots queue depth, breaker
   states (plus cumulative open *dwell time* per breaker), degraded
   flags, counters, p50/p99 latency (from a bounded reservoir histogram,
@@ -109,6 +122,12 @@ _SALT_JITTER = 0xB0
 
 class QueueFullError(RuntimeError):
     """Admission rejected: the bounded request queue is at capacity."""
+
+
+class EpochProbeError(RuntimeError):
+    """A hot-swap candidate epoch failed its pre-flip probe (non-finite
+    output or executor error) and was quarantined; the previous epoch
+    keeps serving."""
 
 
 def validate_request(req: Request, max_images: int) -> None:
@@ -289,6 +308,7 @@ class _Wave:
     bucket: int                          # padded batch size (warmed)
     x: np.ndarray                        # [bucket, D] fp32 state
     parts: list[_Part]                   # prefix-packed row blocks
+    epoch: int = 0                       # store epoch pinned for dispatches
     retries: int = 0
     degraded: bool = False
     degrade_reported: bool = False       # monitor.on_degrade fired once
@@ -363,7 +383,8 @@ class ServeRuntime:
             "submitted", "completed", "expired", "failed", "retries",
             "finite_trips", "gauss_segments", "oom_splits", "repacks",
             "joins", "mixed_segments",
-            "scan_waves", "exact_waves", "short_waves")}
+            "scan_waves", "exact_waves", "short_waves",
+            "hot_swaps", "epoch_quarantined")}
         # -- observability: bounded latency reservoir (replaces the old
         # unbounded list — O(reservoir) memory no matter the traffic),
         # optional QualityMonitor, and the registry exports go through
@@ -438,12 +459,10 @@ class ServeRuntime:
         def build():
             seg = plan_segment_mixed(self.eng.denoiser.call_masked,
                                      self.eng.schedule, plan, pb, clip)
-            if compile_only:
-                compiled = jax.jit(seg).lower(
-                    jax.ShapeDtypeStruct(shape, jnp.float32),
-                    jax.ShapeDtypeStruct((batch,), jnp.int32)).compile()
-                return lambda xx, pp, _c=compiled: _c(xx, pp)
-            return jax.jit(seg)
+            specs = ((jax.ShapeDtypeStruct(shape, jnp.float32),
+                      jax.ShapeDtypeStruct((batch,), jnp.int32))
+                     if compile_only else None)
+            return self.engine.jitter(seg, aot_specs=specs)
 
         return self.engine.program(key, build)
 
@@ -499,7 +518,7 @@ class ServeRuntime:
                             x_init=(None if aot
                                     else jnp.zeros(shape, jnp.float32)),
                             program_cache=self.engine.program,
-                            compile_only=aot)
+                            compile_only=aot, jitter=self.engine.jitter)
             # mixed-cursor (continuous-batching) segments: one program
             # per plan bucket per plan variant — including the primary
             # plan, whose PLAIN segments eng.warmup() already compiled
@@ -538,6 +557,91 @@ class ServeRuntime:
         stats["runtime_warmup_s"] = time.time() - t0
         stats["programs_total"] = len(self.engine._programs)
         return stats
+
+    # -- store hot-swap -------------------------------------------------------
+    def _probe_epoch(self, epoch: int) -> None:
+        """Dry-run one *already-warmed* program pinned at ``epoch`` on a
+        throwaway zero input and require finite output.  Same shapes ->
+        same compiled executable, so the probe costs zero compiles and
+        exercises the new operands end to end (screen, re-rank,
+        aggregate) before any user row ever touches them."""
+        b = self.eng.batch_buckets()[0]
+        shape = (b, self.eng.store.dim)
+        x = jnp.zeros(shape, jnp.float32)
+        with self.engine.at_epoch(epoch):
+            if self.eng.mode == "plan":
+                pb = self.eng.plan.buckets[0]
+                key = plan_segment_key(self.eng.plan, pb, shape, "float32",
+                                       self.eng.clip_value)
+                fn = self.engine.program(key, lambda: self.engine.jitter(
+                    plan_segment(self.eng.denoiser.call_masked,
+                                 self.eng.schedule, self.eng.plan, pb,
+                                 self.eng.clip_value)))
+            else:
+                fn = self.eng._scan_program(shape)
+            out = np.asarray(jax.block_until_ready(fn(x)))
+        if not np.isfinite(out).all():
+            raise EpochProbeError(
+                f"epoch {epoch} probe produced non-finite output "
+                f"({int((~np.isfinite(out)).sum())} bad values)")
+
+    def hot_swap(self, store, index=None, epoch: int | None = None,
+                 probe: bool = True) -> int:
+        """Swap the serving golden store without downtime or recompiles.
+
+        Installs ``(store, index)`` as a standby epoch in the warmed
+        engine (same-shape contract enforced by ``engine.swap_compat``
+        — the appendable lifecycle's capacity-padded views satisfy it
+        by construction), probes it (:meth:`_probe_epoch`), then flips
+        the serving epoch under the scheduler lock.  Waves admitted
+        before the flip finish on their own epoch (``_Wave.epoch``);
+        waves admitted after see the new store.  A failed probe
+        quarantines the epoch — it is retired, ``epoch_quarantined``
+        increments, :class:`EpochProbeError` propagates, and the old
+        epoch keeps serving untouched.
+
+        Returns the installed epoch id (``epoch`` if given — e.g. the
+        lifecycle's on-disk epoch number — else the next free int).
+        """
+        tr = obs_trace.tracer()
+        with self._lock:
+            if epoch is None:
+                epoch = max(self.engine._epochs) + 1
+            epoch = int(epoch)
+            if epoch == self.engine.serving_epoch:
+                raise ValueError(f"epoch {epoch} is already serving")
+            self.engine.install_epoch(epoch, store, index)
+        if probe:
+            try:
+                self._probe_epoch(epoch)
+            except (EpochProbeError, *RETRYABLE_ERRORS) as e:
+                with self._lock:
+                    self.engine.retire_epoch(epoch)
+                    self.counters["epoch_quarantined"] += 1
+                if tr.enabled:
+                    tr.event("epoch.quarantine", epoch=epoch,
+                             error=type(e).__name__)
+                if isinstance(e, EpochProbeError):
+                    raise
+                raise EpochProbeError(
+                    f"epoch {epoch} probe failed: {e}") from e
+        with self._lock:
+            prev = self.engine.serving_epoch
+            self.engine.set_serving_epoch(epoch)
+            self.counters["hot_swaps"] += 1
+            self._gc_epochs()
+        if tr.enabled:
+            tr.event("epoch.swap", epoch=epoch, prev=prev)
+        return epoch
+
+    def _gc_epochs(self) -> None:
+        """Retire standby epochs no in-flight wave references (caller
+        holds the lock).  Serving and wave-pinned epochs survive; the
+        rest free their device operands."""
+        live = {w.epoch for w in self._waves}
+        live.add(self.engine.serving_epoch)
+        for e in [e for e in self.engine._epochs if e not in live]:
+            self.engine.retire_epoch(e)
 
     # -- admission ------------------------------------------------------------
     def submit(self, req: Request) -> Ticket:
@@ -614,7 +718,9 @@ class ServeRuntime:
                     return
                 if w.running or w.mode != "plan" or w.plan_name != name:
                     continue             # never mix plan variants in a wave
-                self._join_wave(w, cap, now)
+                if w.epoch != self.engine.serving_epoch:
+                    continue             # one epoch per wave: joiners must
+                self._join_wave(w, cap, now)  # see the serving store
         while self._queue and len(self._waves) < self.cfg.max_inflight_waves:
             parts: list[_Part] = []
             used = 0
@@ -633,6 +739,7 @@ class ServeRuntime:
                 self.eng._init_noise(keys)), np.float32)
             wave = _Wave(seq=self._seq, mode=mode, plan_name=name,
                          plan=plan, bucket=bucket, x=x, parts=parts,
+                         epoch=self.engine.serving_epoch,
                          degraded=(name not in ("primary",)
                                    and self.eng.mode != "scan"))
             self._seq += 1
@@ -761,9 +868,9 @@ class ServeRuntime:
         clip = self.eng.clip_value
         key = plan_segment_key(plan, b, (wave.bucket, self.eng.store.dim),
                                "float32", clip)
-        return self.engine.program(key, lambda: jax.jit(plan_segment(
-            self.eng.denoiser.call_masked, self.eng.schedule, plan, b,
-            clip)))
+        return self.engine.program(key, lambda: self.engine.jitter(
+            plan_segment(self.eng.denoiser.call_masked, self.eng.schedule,
+                         plan, b, clip)))
 
     def _backoff(self, attempt: int) -> None:
         self._retry_seq += 1
@@ -788,8 +895,12 @@ class ServeRuntime:
         (``scripts/trace_latency.py`` reconstructs per-request
         queue/compute timelines from them)."""
         tr = obs_trace.tracer()
+        # every dispatch of this wave resolves operands from the epoch
+        # it was admitted under — a hot_swap between its seams changes
+        # nothing for it (the swap's whole zero-downtime contract)
         if not tr.enabled:
-            return self._run_segment_inner(wave, seg, tr)
+            with self.engine.at_epoch(wave.epoch):
+                return self._run_segment_inner(wave, seg, tr)
         ts, start, stop = self._segment_grid(wave, seg)
         n_act = wave.used
         if wave.mode == "plan":
@@ -799,8 +910,9 @@ class ServeRuntime:
                      mode=wave.mode, plan=wave.plan_name,
                      bucket=wave.bucket, used=wave.used,
                      active=n_act, frozen=wave.used - n_act,
-                     start=start, stop=stop):
-            return self._run_segment_inner(wave, seg, tr)
+                     start=start, stop=stop, epoch=wave.epoch):
+            with self.engine.at_epoch(wave.epoch):
+                return self._run_segment_inner(wave, seg, tr)
 
     def _run_segment_inner(self, wave: _Wave, seg: int, tr):
         x_prev = wave.x
@@ -912,7 +1024,7 @@ class ServeRuntime:
             self._waves.append(_Wave(
                 seq=self._seq, mode=wave.mode, plan_name=wave.plan_name,
                 plan=wave.plan, bucket=bucket, x=x, parts=parts,
-                retries=wave.retries, degraded=True))
+                epoch=wave.epoch, retries=wave.retries, degraded=True))
             tr = obs_trace.tracer()
             if tr.enabled:
                 tr.event("wave.split", wave=wave.seq, child=self._seq,
@@ -1061,7 +1173,8 @@ class ServeRuntime:
                 wave.running = False
         with self._lock:
             self._post_segment(wave, seg, result)
-        return True
+            self._gc_epochs()            # waves done on an old epoch may
+        return True                      # have been its last reference
 
     def run_until_idle(self, max_iters: int = 100_000) -> None:
         """Drain the queue and all in-flight waves inline.
@@ -1132,6 +1245,8 @@ class ServeRuntime:
                 "compiles_post_warmup": (self.engine._builds
                                          - self._builds_warm
                                          if self._warm else 0),
+                "serving_epoch": self.engine.serving_epoch,
+                "epochs_resident": len(self.engine._epochs),
                 "p50_ms": self._lat_hist.quantile(0.5) * 1e3,
                 "p95_ms": self._lat_hist.quantile(0.95) * 1e3,
                 "p99_ms": self._lat_hist.quantile(0.99) * 1e3,
@@ -1156,6 +1271,8 @@ class ServeRuntime:
         reg.gauge("serve_inflight_waves").set(len(self._waves))
         reg.gauge("serve_compiles_post_warmup").set(
             self.engine._builds - self._builds_warm if self._warm else 0)
+        reg.gauge("serve_serving_epoch").set(self.engine.serving_epoch)
+        reg.gauge("serve_epochs_resident").set(len(self.engine._epochs))
         for name, br in (("exec", self.br_exec),
                          ("screen", self.br_screen),
                          ("oom", self.br_oom),

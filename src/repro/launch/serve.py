@@ -53,6 +53,7 @@ import numpy as np
 
 from repro.core import (GoldDiff, GoldDiffConfig, build_plan, make_schedule,
                         sample, sample_plan, sample_scan)
+from repro.core.dataset import DatasetStore
 from repro.core.denoisers import OptimalDenoiser, make_denoiser
 from repro.core.schedules import sampling_timesteps
 from repro.data import make_dataset
@@ -105,7 +106,8 @@ class ServeEngine:
     at, at the cost of more programs to warm (see docs/SERVING.md).
     """
 
-    def __init__(self, dataset: str, dataset_kw: dict | None = None,
+    def __init__(self, dataset: str | DatasetStore,
+                 dataset_kw: dict | None = None,
                  base: str = "optimal", schedule: str = "ddpm_linear",
                  num_steps: int = 10, gd_cfg: GoldDiffConfig | None = None,
                  max_batch: int = 16, mesh=None, mode: str = "auto",
@@ -113,7 +115,11 @@ class ServeEngine:
                  max_buckets: int | None = None,
                  clip_value: float | None = 3.0, index=None,
                  index_mode: str = "auto"):
-        self.store = make_dataset(dataset, **(dataset_kw or {}))
+        # a DatasetStore passes through directly — the store-lifecycle
+        # path (repro.index.ingest) serves its capacity-padded view
+        # without a synthetic-dataset detour
+        self.store = (dataset if isinstance(dataset, DatasetStore)
+                      else make_dataset(dataset, **(dataset_kw or {})))
         self.schedule = make_schedule(schedule, 1000)
         self.num_steps = num_steps
         self.max_batch = max_batch
@@ -219,16 +225,16 @@ class ServeEngine:
         key = ("serve_scan", shape, self.num_steps,  # carries randomness
                None if self.clip_value is None else float(self.clip_value))
 
-        def build():
-            jf = jax.jit(lambda xi: sample_scan(
+        def body(xi):
+            return sample_scan(
                 self.denoiser.call_masked, self.schedule, shape, rng,
                 num_steps=self.num_steps, clip_value=self.clip_value,
-                x_init=xi))
-            if not compile_only:
-                return jf
-            compiled = jf.lower(
-                jax.ShapeDtypeStruct(shape, jnp.float32)).compile()
-            return lambda xi, _c=compiled: _c(xi)
+                x_init=xi)
+
+        def build():
+            specs = ((jax.ShapeDtypeStruct(shape, jnp.float32),)
+                     if compile_only else None)
+            return self.engine.jitter(body, aot_specs=specs)
 
         return self.engine.program(key, build)
 
@@ -240,7 +246,8 @@ class ServeEngine:
             x = sample_plan(self.denoiser.call_masked, self.schedule, shape,
                             jax.random.PRNGKey(0), self.plan,
                             clip_value=self.clip_value, x_init=x_init,
-                            program_cache=self.engine.program)
+                            program_cache=self.engine.program,
+                            jitter=self.engine.jitter)
         elif self.mode == "scan":
             x = self._scan_program(shape)(x_init)
         else:                                # per-step static programs
@@ -278,7 +285,7 @@ class ServeEngine:
                             (b, self.store.dim), jax.random.PRNGKey(0),
                             self.plan, clip_value=self.clip_value,
                             program_cache=self.engine.program,
-                            compile_only=True)
+                            compile_only=True, jitter=self.engine.jitter)
             else:
                 self._scan_program((b, self.store.dim), compile_only=True)
         return {"programs_compiled": len(self.engine._programs) - n0,

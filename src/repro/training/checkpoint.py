@@ -1,17 +1,34 @@
 """Flat-file checkpointing for param/optimizer pytrees (no orbax offline).
 
 Layout: ``<dir>/step_<N>/arrays.npz`` + ``manifest.json`` holding the
-flattened key paths and dtypes.  Restores onto host then (optionally)
+flattened key paths, dtypes, and per-array sha256 checksums.  Writes go
+through the shared crash-safe artifact writer (``repro.utils.atomic``:
+tmp + fsync + rename, manifest last) — the same implementation the
+golden-store persistence uses — so a torn or bit-rotted checkpoint
+raises a typed :class:`CheckpointCorruptionError` at restore instead of
+silently loading garbage weights.  Restores onto host then (optionally)
 device_put with the caller's shardings.
 """
 from __future__ import annotations
 
-import json
 import pathlib
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.utils import atomic
+
+CKPT_FORMAT = "training-checkpoint"
+CKPT_FORMAT_VERSION = 1
+
+
+class CheckpointCorruptionError(atomic.ArtifactCorruptionError):
+    """Checkpoint bytes disagree with their manifest."""
+
+
+class CheckpointVersionError(atomic.ArtifactVersionError):
+    """Checkpoint written by an incompatible format version."""
 
 
 def _flatten(tree) -> dict[str, np.ndarray]:
@@ -26,11 +43,10 @@ def _flatten(tree) -> dict[str, np.ndarray]:
 def save(directory: str | pathlib.Path, step: int, tree) -> pathlib.Path:
     d = pathlib.Path(directory) / f"step_{step:08d}"
     d.mkdir(parents=True, exist_ok=True)
-    flat = _flatten(tree)
-    np.savez(d / "arrays.npz", **flat)
-    manifest = {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
-                for k, v in flat.items()}
-    (d / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    atomic.save_arrays(str(d / "arrays.npz"), _flatten(tree),
+                       fmt=CKPT_FORMAT, version=CKPT_FORMAT_VERSION,
+                       meta={"step": int(step)},
+                       manifest_path=str(d / "manifest.json"))
     return d
 
 
@@ -44,11 +60,20 @@ def latest_step(directory: str | pathlib.Path) -> int | None:
 
 def restore(directory: str | pathlib.Path, step: int, like_tree):
     d = pathlib.Path(directory) / f"step_{step:08d}"
-    data = np.load(d / "arrays.npz")
+    data, _ = atomic.load_arrays(
+        str(d / "arrays.npz"), fmt=CKPT_FORMAT,
+        version=CKPT_FORMAT_VERSION,
+        manifest_path=str(d / "manifest.json"),
+        corruption_exc=CheckpointCorruptionError,
+        version_exc=CheckpointVersionError)
     flat_like = _flatten(like_tree)
-    assert set(data.files) == set(flat_like), "checkpoint/tree key mismatch"
+    if set(data) != set(flat_like):
+        raise CheckpointCorruptionError(
+            f"{d}: checkpoint/tree key mismatch "
+            f"(missing: {sorted(set(flat_like) - set(data)) or '-'}, "
+            f"unexpected: {sorted(set(data) - set(flat_like)) or '-'})")
     leaves, treedef = jax.tree.flatten(like_tree)
-    keys = list(_flatten(like_tree).keys())
+    keys = list(flat_like.keys())
     restored = [jnp.asarray(data[k]).astype(l.dtype)
                 for k, l in zip(keys, leaves)]
     return treedef.unflatten(restored)

@@ -1,0 +1,15 @@
+"""Small dependency-free utilities shared across the stack.
+
+:mod:`repro.utils.atomic` — the single crash-safe artifact writer
+(tmp + fsync + rename, sha256-checksummed JSON manifests) used by both
+``repro.index.store`` persistence and ``repro.training.checkpoint``.
+"""
+from repro.utils.atomic import (ArtifactCorruptionError, ArtifactError,
+                                ArtifactVersionError, atomic_write_bytes,
+                                atomic_write_json, atomic_write_text,
+                                load_arrays, save_arrays, sha256_hex)
+
+__all__ = ["ArtifactError", "ArtifactCorruptionError",
+           "ArtifactVersionError", "atomic_write_bytes",
+           "atomic_write_json", "atomic_write_text", "load_arrays",
+           "save_arrays", "sha256_hex"]

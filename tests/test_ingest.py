@@ -1,0 +1,320 @@
+"""Appendable golden-store lifecycle: durability, crash windows, replay
+determinism, capacity behavior, and post-append retrieval quality.
+
+The crash-safety tests simulate kills at every ``commit`` stage and at
+torn-journal boundaries, then assert *bit-identical* recovery — the
+recovered arrays equal the pre-crash in-memory state exactly, not
+approximately.
+"""
+import os
+
+import numpy as np
+import pytest
+
+from repro.data import gmm
+from repro.index import (IngestConfig, StoreCapacityError,
+                         StoreCorruptionError, StoreLifecycle, build_index,
+                         screening_recall, validate_index)
+from repro.index.ingest import JOURNAL_FILE
+from repro.launch.faults import corrupt_store
+
+
+def make_lifecycle(root, n=512, dim=16, seed=3, num_clusters=8,
+                   cfg=None):
+    store = gmm(n, dim=dim, seed=seed)._replace(labels=None)
+    index = build_index(store, num_clusters=num_clusters)
+    return StoreLifecycle.create(str(root), store, index,
+                                 cfg or IngestConfig()), store
+
+
+def new_rows(b, dim=16, seed=100):
+    return np.random.default_rng(seed).normal(
+        size=(b, dim)).astype(np.float32)
+
+
+def snapshot(lc):
+    return {k: v.copy() for k, v in lc._arrays().items()}
+
+
+def assert_state_equal(a, b):
+    for k in a:
+        np.testing.assert_array_equal(a[k], b[k], err_msg=k)
+
+
+class Kill(RuntimeError):
+    pass
+
+
+def kill_at(stage):
+    def hook(s):
+        if s == stage:
+            raise Kill(stage)
+    return hook
+
+
+# -- roundtrip + append durability -------------------------------------------
+
+def test_create_open_roundtrip_bit_identical(tmp_path):
+    lc, _ = make_lifecycle(tmp_path)
+    before = snapshot(lc)
+    lc2 = StoreLifecycle.open(str(tmp_path))
+    assert_state_equal(before, snapshot(lc2))
+    assert lc2.epoch == 0 and lc2.n_rows == lc.n_rows
+    assert lc2.quarantined == []
+
+
+def test_append_then_reopen_replays_bit_identical(tmp_path):
+    lc, _ = make_lifecycle(tmp_path)
+    lc.append(new_rows(16))
+    lc.append(new_rows(8, seed=101))
+    before = snapshot(lc)
+    # no commit: the journal is the only durable record of the appends
+    lc2 = StoreLifecycle.open(str(tmp_path))
+    assert lc2.replayed_frames == 2
+    assert lc2.n_rows == lc.n_rows
+    assert_state_equal(before, snapshot(lc2))
+
+
+def test_append_journal_precedes_memory(tmp_path):
+    lc, _ = make_lifecycle(tmp_path)
+    j = os.path.join(str(tmp_path), JOURNAL_FILE)
+    size0 = os.path.getsize(j)
+    lc.append(new_rows(4))
+    assert os.path.getsize(j) > size0
+
+
+def test_commit_then_reopen(tmp_path):
+    lc, _ = make_lifecycle(tmp_path)
+    lc.append(new_rows(16))
+    epoch = lc.commit()
+    assert epoch == 1 and lc.pending_rows == 0
+    before = snapshot(lc)
+    lc2 = StoreLifecycle.open(str(tmp_path))
+    assert lc2.epoch == 1 and lc2.replayed_frames == 0
+    assert_state_equal(before, snapshot(lc2))
+
+
+def test_commit_without_pending_is_noop(tmp_path):
+    lc, _ = make_lifecycle(tmp_path)
+    assert lc.commit() == 0
+    assert lc.epoch == 0
+
+
+# -- crash windows (satellite 3) ---------------------------------------------
+
+@pytest.mark.parametrize("stage", ["epoch_written", "current_flipped",
+                                   "journal_truncated"])
+def test_kill_during_commit_recovers_bit_identical(tmp_path, stage):
+    """A crash at ANY commit stage recovers to the exact pre-crash
+    state: the new epoch dir is invisible until CURRENT flips, and
+    stale journal frames are skipped by their epoch tag after it."""
+    lc, _ = make_lifecycle(tmp_path)
+    lc.append(new_rows(12))
+    before = snapshot(lc)
+    with pytest.raises(Kill):
+        lc.commit(kill=kill_at(stage))
+    lc2 = StoreLifecycle.open(str(tmp_path))
+    assert_state_equal(before, snapshot(lc2))
+    assert lc2.n_rows == lc.n_rows
+    # the recovered lifecycle is fully functional: commit + reopen again
+    lc2.append(new_rows(4, seed=7))
+    lc2.commit()
+    lc3 = StoreLifecycle.open(str(tmp_path))
+    assert_state_equal(snapshot(lc2), snapshot(lc3))
+
+
+def test_torn_journal_tail_replays_valid_prefix(tmp_path):
+    lc, _ = make_lifecycle(tmp_path)
+    lc.append(new_rows(8))
+    mid = snapshot(lc)
+    lc.append(new_rows(8, seed=101))
+    j = os.path.join(str(tmp_path), JOURNAL_FILE)
+    size = os.path.getsize(j)
+    with open(j, "r+b") as f:           # tear the second frame mid-payload
+        f.truncate(size - 10)
+    lc2 = StoreLifecycle.open(str(tmp_path))
+    assert lc2.replayed_frames == 1
+    assert_state_equal(mid, snapshot(lc2))
+    # the torn tail was truncated away: a fresh append + reopen works
+    lc2.append(new_rows(4, seed=9))
+    lc3 = StoreLifecycle.open(str(tmp_path))
+    assert_state_equal(snapshot(lc2), snapshot(lc3))
+
+
+def test_corrupt_journal_frame_stops_replay(tmp_path):
+    lc, _ = make_lifecycle(tmp_path)
+    lc.append(new_rows(8))
+    before_append = StoreLifecycle.open(str(tmp_path), fallback=False)
+    j = os.path.join(str(tmp_path), JOURNAL_FILE)
+    data = bytearray(open(j, "rb").read())
+    data[-5] ^= 0xFF                    # flip a payload byte: CRC mismatch
+    with open(j, "wb") as f:
+        f.write(data)
+    lc2 = StoreLifecycle.open(str(tmp_path))
+    assert lc2.replayed_frames == 0     # invalid frame = not applied
+    assert lc2.n_rows == before_append.n_rows - 8
+
+
+def test_replay_is_idempotent_across_reopens(tmp_path):
+    lc, _ = make_lifecycle(tmp_path)
+    lc.append(new_rows(8))
+    s1 = snapshot(StoreLifecycle.open(str(tmp_path)))
+    s2 = snapshot(StoreLifecycle.open(str(tmp_path)))
+    assert_state_equal(s1, s2)
+
+
+# -- quarantine / fallback (tentpole d) ---------------------------------------
+
+def test_open_quarantines_corrupt_current_epoch(tmp_path):
+    lc, _ = make_lifecycle(tmp_path)
+    lc.append(new_rows(8))
+    lc.commit()                          # epoch 1 is CURRENT
+    npz = os.path.join(str(tmp_path), "epoch_00000001", "arrays.npz")
+    corrupt_store(npz, "bitflip", seed=5)
+    lc2 = StoreLifecycle.open(str(tmp_path))
+    assert lc2.epoch == 0                # walked back to the survivor
+    assert len(lc2.quarantined) == 1
+    assert lc2.quarantined[0][0] == "epoch_00000001"
+    # journal frames were epoch-1-tagged: skipped against epoch 0
+    assert lc2.replayed_frames == 0
+
+
+def test_open_no_fallback_raises_typed(tmp_path):
+    lc, _ = make_lifecycle(tmp_path)
+    lc.append(new_rows(8))
+    lc.commit()
+    npz = os.path.join(str(tmp_path), "epoch_00000001", "arrays.npz")
+    corrupt_store(npz, "truncate")
+    with pytest.raises(StoreCorruptionError):
+        StoreLifecycle.open(str(tmp_path), fallback=False)
+
+
+def test_open_all_epochs_corrupt_raises(tmp_path):
+    lc, _ = make_lifecycle(tmp_path)
+    for name in os.listdir(str(tmp_path)):
+        if name.startswith("epoch_"):
+            corrupt_store(os.path.join(str(tmp_path), name, "arrays.npz"),
+                          "torn_rename")
+    with pytest.raises(StoreCorruptionError):
+        StoreLifecycle.open(str(tmp_path))
+
+
+# -- determinism + capacity ---------------------------------------------------
+
+def test_append_is_deterministic(tmp_path):
+    lcs = []
+    for sub in ("a", "b"):
+        lc, _ = make_lifecycle(tmp_path / sub)
+        for s in (100, 101, 102):
+            lc.append(new_rows(8, seed=s))
+        lcs.append(lc)
+    assert_state_equal(snapshot(lcs[0]), snapshot(lcs[1]))
+
+
+def test_capacity_error_before_journaling(tmp_path):
+    lc, _ = make_lifecycle(tmp_path, cfg=IngestConfig(slack=1.0,
+                                                      spare_frac=0.01))
+    j = os.path.join(str(tmp_path), JOURNAL_FILE)
+    free = lc.n_capacity - lc.n_rows
+    size0 = os.path.getsize(j)
+    with pytest.raises(StoreCapacityError):
+        lc.append(new_rows(free + 1))
+    assert os.path.getsize(j) == size0   # nothing was journaled
+    assert lc.n_rows == 512              # nothing was applied
+
+
+def test_shapes_invariant_across_appends(tmp_path):
+    """The whole hot-swap contract: appends never change any shape,
+    offsets, or the static padded width."""
+    lc, _ = make_lifecycle(tmp_path)
+    ds0, ix0 = lc.view()
+    lc.append(new_rows(64))
+    lc.commit()
+    ds1, ix1 = lc.view()
+    assert ds1.X.shape == ds0.X.shape
+    assert ix1.max_cluster == ix0.max_cluster
+    assert ix1.num_clusters == ix0.num_clusters
+    np.testing.assert_array_equal(np.asarray(ix1.offsets),
+                                  np.asarray(ix0.offsets))
+
+
+def test_view_never_aliases_live_buffers(tmp_path):
+    """``view()`` must hand out COPIES: on CPU a zero-copy jax array
+    would let a later append mutate an installed engine epoch in place
+    (the hot-swap correctness bug this pins)."""
+    lc, _ = make_lifecycle(tmp_path)
+    ds, ix = lc.view()
+    x_before = np.asarray(ds.X).copy()
+    ps_before = np.asarray(ix.proxy_sorted).copy()
+    lc.append(new_rows(32))
+    np.testing.assert_array_equal(np.asarray(ds.X), x_before)
+    np.testing.assert_array_equal(np.asarray(ix.proxy_sorted), ps_before)
+
+
+def test_recluster_fills_spares_and_stays_valid(tmp_path):
+    """Enough appends to overflow windows: local 2-means moves rows to
+    spare windows, and the resulting index still passes the full
+    semantic validation."""
+    lc, _ = make_lifecycle(tmp_path, cfg=IngestConfig(slack=1.05,
+                                                      spare_frac=0.5))
+    free = lc.n_capacity - lc.n_rows
+    lc.append(new_rows(free))            # fill to the brim
+    assert lc.n_rows == lc.n_capacity
+    _, ix = lc.view()
+    validate_index({f: np.asarray(getattr(ix, f)) for f in
+                    ("centroids", "centroid_norms", "perm", "offsets",
+                     "proxy_sorted", "proxy_norms_sorted")},
+                   ix.max_cluster)
+    # every appended row is selectable exactly once
+    fin = np.isfinite(np.asarray(ix.proxy_norms_sorted))
+    ids = np.asarray(ix.perm)[fin]
+    assert ids.size == lc.n_rows == np.unique(ids).size
+
+
+def test_view_through_engine_full_recall_on_padded_layout(tmp_path):
+    """The capacity-padded view is an ordinary (store, index) pair: an
+    unmodified engine screens it with recall 1.0 vs the exact scan on
+    the occupied rows (+inf padding never screens in)."""
+    import jax.numpy as jnp
+
+    from repro.core import GoldDiffConfig, GoldDiffEngine, make_schedule
+    from repro.index.schedule import ProbeSchedule
+
+    lc, store = make_lifecycle(tmp_path, n=1024, num_clusters=16)
+    lc.append(new_rows(64, seed=42))
+    ds, ix = lc.view()
+    eng = GoldDiffEngine(ds, make_schedule("ddpm_linear", 1000),
+                         GoldDiffConfig(), index=ix, index_mode="always",
+                         probe_schedule=ProbeSchedule())
+    x = jnp.asarray(np.random.default_rng(0).normal(
+        size=(4, store.dim)).astype(np.float32))
+    for t in (900, 300, 50):
+        ids = np.asarray(eng.select(x, t))
+        occupied = ids < lc.n_rows
+        assert occupied.all()            # padding rows never selected
+        assert np.isfinite(np.asarray(eng.denoise(x, t))).all()
+
+
+def test_post_append_recall_floor(tmp_path):
+    """Screening recall vs the exact top-m on the grown store stays
+    >= 0.95 after appends at 10% of N (the acceptance floor the ingest
+    benchmark gates; checked here at test scale)."""
+    lc, store = make_lifecycle(tmp_path, n=1024, num_clusters=16)
+    lc.append(new_rows(102, seed=42))    # ~10% growth
+    ds, ix = lc.view()
+    q = np.random.default_rng(1).normal(size=(8, 16)).astype(np.float32)
+    prox = np.asarray(ds.proxy)
+    pn = np.asarray(ds.proxy_norms)
+    m = 64
+    d2_exact = pn[None, :] - 2.0 * (q @ prox.T)
+    exact_ids = np.argsort(d2_exact, axis=1, kind="stable")[:, :m]
+
+    # indexed candidates: probe ALL windows' slots (capacity layout) and
+    # keep the finite top-m — measures placement quality, not schedule
+    pns = np.asarray(ix.proxy_norms_sorted)
+    ps = np.asarray(ix.proxy_sorted)
+    d2_idx = pns[None, :] - 2.0 * (q @ ps.T)
+    top = np.argsort(d2_idx, axis=1, kind="stable")[:, :m]
+    rec = screening_recall(top, np.take_along_axis(d2_idx, top, 1),
+                           np.asarray(ix.perm), exact_ids)
+    assert rec >= 0.95, rec

@@ -1,0 +1,216 @@
+"""Crash-safe persistence suite: the shared atomic artifact writer,
+golden-index save/load validation, checkpoint consolidation, and every
+on-disk corruption regime (``faults.corrupt_store``) surfacing as a
+TYPED load error — never silent garbage.
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.data import gmm
+from repro.index import (StoreCorruptionError, StoreVersionError,
+                         build_index, load_index, save_index,
+                         validate_index)
+from repro.launch.faults import STORE_CORRUPTIONS, corrupt_store
+from repro.training import checkpoint
+from repro.utils import atomic
+
+
+@pytest.fixture(scope="module")
+def small_index():
+    store = gmm(512, dim=16, seed=3)
+    return store, build_index(store, num_clusters=8)
+
+
+# -- atomic writer ------------------------------------------------------------
+
+def test_atomic_write_leaves_no_temp_files(tmp_path):
+    p = tmp_path / "artifact.bin"
+    atomic.atomic_write_bytes(str(p), b"payload")
+    assert p.read_bytes() == b"payload"
+    leftovers = [f for f in os.listdir(tmp_path) if f != "artifact.bin"]
+    assert leftovers == []
+
+
+def test_save_arrays_manifest_checksums(tmp_path):
+    p = str(tmp_path / "arr.npz")
+    arrays = {"a": np.arange(6, dtype=np.float32).reshape(2, 3)}
+    atomic.save_arrays(p, arrays, fmt="test-fmt", version=1)
+    with open(p + ".manifest.json") as f:
+        m = json.load(f)
+    assert m["format"] == "test-fmt" and m["format_version"] == 1
+    assert m["arrays"]["a"]["sha256"] == atomic.sha256_hex(
+        np.ascontiguousarray(arrays["a"]).tobytes())
+    out, _ = atomic.load_arrays(p, fmt="test-fmt", version=1)
+    np.testing.assert_array_equal(out["a"], arrays["a"])
+
+
+def test_load_arrays_missing_manifest_is_typed(tmp_path):
+    p = str(tmp_path / "arr.npz")
+    atomic.save_arrays(p, {"a": np.zeros(3)}, fmt="f", version=1)
+    os.remove(p + ".manifest.json")
+    with pytest.raises(atomic.ArtifactCorruptionError):
+        atomic.load_arrays(p, fmt="f", version=1)
+
+
+def test_load_arrays_wrong_format_is_typed(tmp_path):
+    p = str(tmp_path / "arr.npz")
+    atomic.save_arrays(p, {"a": np.zeros(3)}, fmt="f", version=1)
+    with pytest.raises(atomic.ArtifactCorruptionError):
+        atomic.load_arrays(p, fmt="other", version=1)
+
+
+# -- golden-index save/load (satellite 1) -------------------------------------
+
+def test_index_roundtrip_bit_identical(small_index, tmp_path):
+    _, index = small_index
+    p = str(tmp_path / "index.npz")
+    save_index(index, p)
+    loaded = load_index(p)
+    assert loaded.max_cluster == index.max_cluster
+    for f in ("centroids", "centroid_norms", "perm", "offsets",
+              "proxy_sorted", "proxy_norms_sorted"):
+        np.testing.assert_array_equal(np.asarray(getattr(loaded, f)),
+                                      np.asarray(getattr(index, f)))
+
+
+@pytest.mark.parametrize("kind", STORE_CORRUPTIONS)
+def test_index_corruption_regimes_are_typed(small_index, tmp_path, kind):
+    """Every corruption regime loads as StoreCorruptionError /
+    StoreVersionError — the acceptance contract for damaged artifacts."""
+    _, index = small_index
+    p = str(tmp_path / "index.npz")
+    save_index(index, p)
+    corrupt_store(p, kind, seed=7)
+    expected = (StoreVersionError if kind == "stale_manifest"
+                else StoreCorruptionError)
+    with pytest.raises(expected):
+        load_index(p)
+
+
+def test_index_missing_array_is_typed(small_index, tmp_path):
+    _, index = small_index
+    p = str(tmp_path / "index.npz")
+    save_index(index, p)
+    # drop one array from the npz, leave the manifest stale
+    data = dict(np.load(p))
+    del data["perm"]
+    np.savez(p, **data)
+    with pytest.raises(StoreCorruptionError):
+        load_index(p)
+
+
+def _fields(index):
+    return {f: np.asarray(getattr(index, f)) for f in
+            ("centroids", "centroid_norms", "perm", "offsets",
+             "proxy_sorted", "proxy_norms_sorted")}
+
+
+def test_validate_index_rejects_unsorted_offsets(small_index):
+    _, index = small_index
+    f = _fields(index)
+    f["offsets"] = f["offsets"].copy()
+    f["offsets"][1], f["offsets"][2] = f["offsets"][2], f["offsets"][1]
+    with pytest.raises(StoreCorruptionError, match="not sorted"):
+        validate_index(f, index.max_cluster)
+
+
+def test_validate_index_rejects_bad_span(small_index):
+    _, index = small_index
+    f = _fields(index)
+    f["offsets"] = f["offsets"].copy()
+    f["offsets"][-1] += 1
+    with pytest.raises(StoreCorruptionError, match="span"):
+        validate_index(f, index.max_cluster)
+
+
+def test_validate_index_rejects_small_max_cluster(small_index):
+    _, index = small_index
+    with pytest.raises(StoreCorruptionError, match="max_cluster"):
+        validate_index(_fields(index), 1)
+
+
+def test_validate_index_rejects_duplicate_perm(small_index):
+    _, index = small_index
+    f = _fields(index)
+    f["perm"] = f["perm"].copy()
+    f["perm"][1] = f["perm"][0]
+    with pytest.raises(StoreCorruptionError, match="bijection"):
+        validate_index(f, index.max_cluster)
+
+
+def test_validate_index_rejects_out_of_range_perm(small_index):
+    _, index = small_index
+    f = _fields(index)
+    f["perm"] = f["perm"].copy()
+    f["perm"][0] = index.n + 5
+    with pytest.raises(StoreCorruptionError, match="out-of-range"):
+        validate_index(f, index.max_cluster)
+
+
+def test_validate_index_rejects_nan_norms(small_index):
+    _, index = small_index
+    f = _fields(index)
+    f["proxy_norms_sorted"] = f["proxy_norms_sorted"].copy()
+    f["proxy_norms_sorted"][0] = np.nan
+    with pytest.raises(StoreCorruptionError, match="NaN"):
+        validate_index(f, index.max_cluster)
+
+
+def test_validate_index_rejects_float_perm(small_index):
+    _, index = small_index
+    f = _fields(index)
+    f["perm"] = f["perm"].astype(np.float32)
+    with pytest.raises(StoreCorruptionError, match="integer"):
+        validate_index(f, index.max_cluster)
+
+
+# -- training checkpoints ride the same writer (satellite 2) ------------------
+
+def _tree():
+    return {"w": np.arange(12, dtype=np.float32).reshape(3, 4),
+            "b": np.ones(4, np.float32)}
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    d = str(tmp_path / "ckpt")
+    checkpoint.save(d, 3, _tree())
+    assert checkpoint.latest_step(d) == 3
+    out = checkpoint.restore(d, 3, _tree())
+    np.testing.assert_array_equal(np.asarray(out["w"]), _tree()["w"])
+
+
+@pytest.mark.parametrize("kind", STORE_CORRUPTIONS)
+def test_checkpoint_corruption_is_typed(tmp_path, kind):
+    """Checkpoints use the SAME atomic writer, so the same corruption
+    regimes surface as the same typed errors (consolidation guarantee,
+    not a parallel bespoke format)."""
+    d = str(tmp_path / "ckpt")
+    step_dir = checkpoint.save(d, 1, _tree())
+    npz = str(step_dir / "arrays.npz")
+    if kind == "stale_manifest":
+        # checkpoints keep their manifest under <dir>/manifest.json
+        # (corrupt_store's sidecar convention doesn't apply here)
+        with open(step_dir / "manifest.json") as f:
+            m = json.load(f)
+        m["format_version"] = int(m["format_version"]) + 1
+        with open(step_dir / "manifest.json", "w") as f:
+            json.dump(m, f)
+        expected = checkpoint.CheckpointVersionError
+    else:
+        corrupt_store(npz, kind, seed=11)
+        expected = checkpoint.CheckpointCorruptionError
+    with pytest.raises(expected):
+        checkpoint.restore(d, 1, _tree())
+
+
+def test_checkpoint_key_mismatch_is_typed(tmp_path):
+    d = str(tmp_path / "ckpt")
+    checkpoint.save(d, 1, _tree())
+    other = {"w": np.zeros((3, 4), np.float32),
+             "extra": np.zeros(2, np.float32)}
+    with pytest.raises(checkpoint.CheckpointCorruptionError,
+                       match="key mismatch"):
+        checkpoint.restore(d, 1, other)
