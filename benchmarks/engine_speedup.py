@@ -154,17 +154,60 @@ def run(fast: bool = True):
                  "speedup": t_eager / t_eng})
 
     # full-scan Optimal path (Eq. 2) through ops.golden_aggregate — the
-    # seed was already in matmul form here, so this cell tracks that the
-    # ops routing costs nothing rather than contributing to the >=2x claim
+    # seed was already in matmul form here, so this is a PARITY cell, not
+    # a speedup claim: the two programs are the same GEMM + softmax and
+    # time within ~1% of each other under best-of-N timing.  Gated as a
+    # BUDGET pair (ops-routed <= 1.2x the seed form, like plan_flops)
+    # because a strict >=1.0x speedup gate on a structurally-1.0x pair
+    # is a coin flip against median-of-3 timer noise on a ~7 ms op.
     den = OptimalDenoiser(store, sch, backend="xla")
     t_eager = time_call(_eager_full_scan(store, sch, 400), x)
     t_eng = time_call(jax.jit(lambda xx: den(xx, 400)), x)
     full_scan_speedup = t_eager / t_eng
-    rows.append({"kind": "full_scan", "method": "seed_eager", "t": 400,
+    rows.append({"kind": "full_scan", "method": "seed_matmul_us", "t": 400,
                  "N": n, "time_per_step_s": t_eager})
-    rows.append({"kind": "full_scan", "method": "engine_xla", "t": 400,
+    rows.append({"kind": "full_scan", "method": "ops_routed_us", "t": 400,
                  "N": n, "time_per_step_s": t_eng,
                  "speedup": full_scan_speedup})
+
+    # fused single-pass step vs the staged pipeline (gated pairs), both
+    # engines pinned to the streamed-screen + gather-rerank regime —
+    # the large-N shape the fused pass exists for, where the staged
+    # pipeline materializes the [B, m, D] candidate tensor between the
+    # screen and the re-rank.  (In the materialized/dense regime that
+    # ``auto`` picks at this fast-mode N on XLA:CPU the two bodies
+    # compile to the *same op sequence* — ``ops.fused_step`` routes
+    # through the identical screen/rerank/scatter-aggregate forms — so
+    # that pair would tautologically measure ~1.0x and pin nothing.)
+    # Wall-clock AND peak temp bytes (memory_analysis(), the
+    # screen_speedup template) come from the same two step bodies; the
+    # fused form must never be slower, and must show the [B, m, D]
+    # candidate materialization eliminated — its remaining temp peak is
+    # the k-row aggregate gather both paths share.
+    from benchmarks.screen_speedup import _temp_bytes
+    gd_staged = GoldDiff(OptimalDenoiser(store, sch), cfg, backend="xla",
+                         fused=False, screen="streamed", strategy="gather")
+    gd_fused = GoldDiff(OptimalDenoiser(store, sch), cfg, backend="xla",
+                        fused=True, screen="streamed", strategy="gather")
+    for t in (800, 400, 100):
+        t_staged = time_call(lambda xx, _t=t: gd_staged(xx, _t), x)
+        t_fused = time_call(lambda xx, _t=t: gd_fused(xx, _t), x)
+        rows.append({"kind": "fused", "method": "staged_step_us", "t": t,
+                     "N": n, "time_per_step_s": t_staged})
+        rows.append({"kind": "fused", "method": "fused_step_us", "t": t,
+                     "N": n, "time_per_step_s": t_fused,
+                     "speedup": t_staged / t_fused})
+    t_mem = 400
+    mem_staged = _temp_bytes(
+        lambda xx: gd_staged.engine._denoise_body(xx, t_mem), x)
+    mem_fused = _temp_bytes(
+        lambda xx: gd_fused.engine._fused_body(xx, t_mem), x)
+    if mem_staged is not None and mem_fused is not None:
+        rows.append({"kind": "fused", "method": "staged_step_mem",
+                     "t": t_mem, "N": n, "bytes": mem_staged})
+        rows.append({"kind": "fused", "method": "fused_step_mem",
+                     "t": t_mem, "N": n, "bytes": mem_fused,
+                     "mem_reduction": mem_staged / max(mem_fused, 1.0)})
 
     # bf16 storage (ROADMAP item): dataset + proxy operands in bfloat16
     # (norms/accumulation stay fp32) on the same static steps, recording
@@ -197,8 +240,8 @@ def run(fast: bool = True):
     mn, md = min(speedups), sorted(speedups)[len(speedups) // 2]
     summary = (f"engine_xla vs seed eager on the selection path: "
                f"min {mn:.1f}x, median {md:.1f}x over {len(speedups)} cells "
-               f"(target >= 2x); full_scan {full_scan_speedup:.2f}x "
-               f"(seed already matmul-form)")
+               f"(target >= 2x); full_scan parity {full_scan_speedup:.2f}x "
+               f"(seed already matmul-form; budget-gated <= 1.2x)")
     return rows, summary
 
 
@@ -212,6 +255,9 @@ def write_bench_json(rows, path: str = BENCH_JSON) -> None:
         # N in the key: fast (N=4096) and --full (N=16384) runs must not
         # overwrite each other in the cross-PR record
         name = f"{r['kind']}/{r['method']}/N{r['N']}/t{r['t']}"
+        if "bytes" in r:                 # *_mem pair cells hold bytes
+            cells[name] = round(r["bytes"], 1)
+            continue
         cells[name] = round(r["time_per_step_s"] * 1e6, 1)
         if "bf16_relerr_vs_fp32" in r:
             cells[f"{name}/bf16_relerr_vs_fp32"] = \

@@ -15,7 +15,8 @@ Machine peaks are measured in-process the same way: a fat fp32 GEMM for
 peak FLOP/s, a large streaming add for peak byte/s.  The analytic
 traffic model is optimistic (perfect reuse), so every achieved cell
 must land at or below its peak — ``scripts/check_bench.py`` gates
-exactly that, plus the presence of all four core stages.
+exactly that, plus the presence of all core stages (screen, rerank,
+aggregate, full_scan, and the fused single-pass ``fused_step`` kind).
 
 Also emits the **tracing-overhead gate**: a warm engine step timed with
 the tracer disabled (``obs_base_us``) vs enabled (``obs_traced_us``);
@@ -36,7 +37,8 @@ import jax.numpy as jnp
 from benchmarks.common import merge_bench_json
 from repro.core import (GoldDiff, GoldDiffConfig, OptimalDenoiser,
                         make_schedule, streaming)
-from repro.core.plan import full_scan_costs, step_stage_costs
+from repro.core.plan import (full_scan_costs, fused_step_costs,
+                             step_stage_costs)
 from repro.data import mnist_like
 from repro.index import build_index
 from repro.kernels import ops
@@ -189,7 +191,24 @@ def run(fast: bool = True):
                            peak_gflops, peak_gbps,
                            {"full_scan": (fs, (x / a,))})
 
+    # fused single-pass step stage: the whole step is ONE program
+    # (kernels/fused_step.py), costed by the read-each-operand-once
+    # fused accounting.  Eliminating the staged path's [B, N]-shaped
+    # aggregate work roughly halves bytes per step, so this cell should
+    # sit closer to the rerank corner of the roof than the staged
+    # screen/aggregate cells do.
+    for t in (800, 100):
+        x = float(sch.b[t]) * jax.random.normal(rng, (b, store.dim))
+        fb = jax.jit(lambda xx, _t=t: eng._fused_body(xx, _t))
+        rows += _roofline_rows("fused", eng, t, x,
+                               fused_step_costs(eng, t, batch=b),
+                               peak_gflops, peak_gbps,
+                               {"fused_step": (fb, (x,))})
+
     # tracing-overhead gate: the same warm engine step, tracer off vs on
+    # (the default engine fuses its dense-strategy steps, so this pair
+    # re-gates the <= 1.03x budget with the fused path ON — the traced
+    # span tags then carry the fused_step stage costs)
     t = 800
     x = float(sch.b[t]) * jax.random.normal(rng, (b, store.dim))
     t_base = _best_time(lambda: eng.denoise(x, t), repeats=10, warmup=3)

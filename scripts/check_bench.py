@@ -39,6 +39,16 @@ PAIRS = {
     # peak-temp-memory pair (bytes): the streamed screen must never
     # allocate MORE than the materialized [B, N] form it replaces
     "materialized_mem": "streamed_mem",
+    # fused single-pass step (kernels/fused_step.py) vs the staged
+    # screen -> rerank -> aggregate pipeline, both pinned to the
+    # streamed + gather regime (the large-N shape where the staged
+    # path materializes the [B, m, D] candidate tensor): wall-clock on
+    # identical static steps ...
+    "staged_step_us": "fused_step_us",
+    # ... and peak temp bytes from the same two bodies (the fused
+    # kernel must eliminate the staged path's [B, m, D] candidate
+    # materialization, never allocate more)
+    "staged_step_mem": "fused_step_mem",
 }
 # budget pairs run the OTHER way: the subject may cost MORE than the
 # baseline, but only up to the listed factor.  Used for the trajectory
@@ -50,6 +60,12 @@ BUDGET_PAIRS = {
     # "completed" imply "within deadline", so p99 <= deadline holds
     # structurally (BENCH_resilience.json) — gate it at exactly 1.0x
     "p99_budget_us": ("p99_us", 1.0),
+    # the full-scan parity cell (BENCH_engine.json): the seed was
+    # already in matmul form on this path, so routing it through
+    # ops.golden_aggregate is a ~1.0x pair by construction — gate that
+    # the routing costs at most 20% (timer noise on a ~7 ms op swings
+    # ~10% under median-of-3), not that it "speeds up"
+    "seed_matmul_us": ("ops_routed_us", 1.2),
     # tracing must be effectively free: a warm engine step with the
     # tracer ENABLED (obs/.../obs_traced_us) may cost at most 3% over
     # the same step with tracing off (benchmarks/roofline.py emits the
@@ -78,8 +94,10 @@ PARITY_MIN = 0.999
 # roofline/ validation: every achieved cell must stay at or below the
 # measured machine peak (the analytic traffic model is optimistic, so
 # achieved > peak means the cost model or the timer is lying), and the
-# record must cover all four core pipeline stages
-ROOFLINE_STAGES = ("screen", "rerank", "aggregate", "full_scan")
+# record must cover all core pipeline stages (including the fused
+# single-pass step kind)
+ROOFLINE_STAGES = ("screen", "rerank", "aggregate", "full_scan",
+                   "fused_step")
 
 
 def check_roofline(path: str, record: dict) -> list[str]:

@@ -62,7 +62,7 @@ the full scan route through ``ops.screen_topm`` / the streaming LSE
 O(B * (m + tile)) peak memory instead of materializing [B, N].
 ``screen="auto"`` keeps the materialized form while the [B, N] buffer
 fits the platform budget (``SCREEN_MATERIALIZE_BYTES``; on CPU the one
-big GEMM + top_k is ~2x faster when it fits) and streams beyond it,
+big GEMM + top_k is ~1.6x faster when it fits) and streams beyond it,
 which makes screening and full-scan baselines runnable at N where the
 dense matrix cannot be allocated at all.  ``screen_tile`` is part of
 every streamed program's cache key.  The same policy applies per shard
@@ -146,7 +146,8 @@ import numpy as np
 from jax.sharding import PartitionSpec
 
 from repro.core.dataset import DatasetStore, downsample_proxy
-from repro.core.plan import full_scan_costs, step_stage_costs
+from repro.core.plan import (full_scan_costs, fused_step_costs,
+                             step_stage_costs)
 from repro.core.schedules import Schedule
 from repro.distributed.sharding import (gather_global_topk, lse_merge_mean,
                                         shard_map_compat)
@@ -169,8 +170,15 @@ GATHER_CROSSOVER_FRAC = {"cpu": 0.10, "gpu": 0.35, "tpu": 0.50}
 # screen (``ops.screen_topm`` / the streaming full-scan LSE) caps peak
 # live memory at O(B * (m + tile)), but its running-merge scan
 # serializes work that the materialized form hands XLA as one big GEMM
-# + top_k — measured ~2x slower on XLA:CPU where everything fits
-# (benchmarks/screen_speedup.py), ~13x less temp memory at N=65536.
+# + top_k.  Re-measured at the PR-10 scan tile (SCAN_TILE=16384;
+# N=65536, B=32): streamed 33/64/204 ms at m=512/1638/6553 vs
+# materialized 20/40/130 ms — a ~1.6x gap (down from ~2-3x at
+# tile=4096), still ~13x less temp memory (benchmarks/
+# screen_speedup.py).  A two-level hierarchical merge (per-tile top-m
+# + tree reduce, ``screen_topm_scan(hier=True)``) measured ~3-6x
+# SLOWER than the carry on XLA:CPU — its TopK custom call fast-paths
+# the carry's sorted-prefix input — so the crossover below is
+# unchanged: materialize while the [B, N] buffer fits.
 # ``screen="auto"`` therefore streams only once the [B, N] fp32 buffer
 # would cross this per-platform budget (i.e. exactly when the dense
 # path stops being allocatable/cheap); "streamed"/"materialized" force
@@ -277,7 +285,8 @@ class GoldDiffEngine:
                  probe_schedule: ProbeSchedule | None = None,
                  strategy: str = "auto", index_mode: str = "auto",
                  mesh=None, shard_axis: str = "data",
-                 screen: str = "auto", screen_tile: int = ops.DEFAULT_TILE):
+                 screen: str = "auto", screen_tile: int | None = None,
+                 fused: str | bool = "auto", batch_axis: str | None = None):
         if backend not in ops.BACKENDS:
             raise ValueError(f"unknown backend {backend!r}; "
                              f"expected one of {ops.BACKENDS}")
@@ -287,9 +296,21 @@ class GoldDiffEngine:
             raise ValueError(f"unknown screen mode {screen!r}")
         if index_mode not in ("auto", "always"):
             raise ValueError(f"unknown index_mode {index_mode!r}")
+        if fused not in ("auto", True, False):
+            raise ValueError(f"unknown fused mode {fused!r}; expected "
+                             f"'auto', True or False")
         if mesh is not None and shard_axis not in mesh.axis_names:
             raise ValueError(f"shard_axis {shard_axis!r} not in mesh axes "
                              f"{mesh.axis_names}")
+        if batch_axis is not None:
+            if mesh is None:
+                raise ValueError("batch_axis requires a mesh")
+            if batch_axis not in mesh.axis_names:
+                raise ValueError(f"batch_axis {batch_axis!r} not in mesh "
+                                 f"axes {mesh.axis_names}")
+            if batch_axis == shard_axis:
+                raise ValueError("batch_axis must differ from shard_axis "
+                                 f"({shard_axis!r})")
         self.store = store
         self.schedule = schedule
         self.cfg = cfg or GoldDiffConfig()
@@ -320,7 +341,9 @@ class GoldDiffEngine:
         self._serving_epoch = 0
         # -- streamed-vs-materialized exact screening (build-time policy)
         self.screen = screen
-        self.screen_tile = int(screen_tile)
+        # None -> per-path default (SCAN_TILE for lax.scan, the VMEM
+        # block for Pallas); an explicit int forces both
+        self.screen_tile = None if screen_tile is None else int(screen_tile)
         # -- per-platform gather-vs-dense strategy (build-time selection)
         platform = jax.default_backend()
         self._screen_budget = SCREEN_MATERIALIZE_BYTES.get(platform, 1 << 31)
@@ -335,15 +358,22 @@ class GoldDiffEngine:
             m_max_frac = self.cfg.sizes(n)[1] / n
             self.strategy = ("gather" if m_max_frac <= self.crossover_frac
                              else "dense")
-        # -- sharded execution (data-sharded store over one mesh axis)
+        # -- fused single-pass step (kernels/fused_step.py) policy
+        self.fused = fused
+        # -- sharded execution (data-sharded store over one mesh axis;
+        # optionally batch-sharded queries over a second axis)
         self.mesh = mesh
         self.shard_axis = shard_axis
+        self.batch_axis = batch_axis
         if mesh is not None:
             self.n_shards = int(mesh.shape[shard_axis])
+            self.batch_shards = (1 if batch_axis is None
+                                 else int(mesh.shape[batch_axis]))
             self._layout = shard_layout(store, mesh, shard_axis, index=index,
                                         storage_dtype=storage_dtype)
         else:
             self.n_shards = 1
+            self.batch_shards = 1
             self._layout = None
         # Per-timestep schedule constants, computed host-side exactly once.
         self._consts: dict[int, tuple[float, float]] = {}
@@ -638,6 +668,44 @@ class GoldDiffEngine:
         """
         return "gather" if self.use_index(t) else self.strategy
 
+    def use_fused(self, t: int) -> bool:
+        """Route this static step through the fused single-pass kernel
+        (``ops.fused_step``; program kind ``"fused_step"``)?
+
+        Indexed steps never fuse — the IVF gather path's sublinear
+        coarse stage is the whole point of the index, and the one-pass
+        streaming kernel reads every store row.  ``True`` forces fusion
+        on every exact step; ``auto`` fuses exactly where the staged
+        pipeline pays for dense [B, N]-shaped work anyway: when the
+        per-step strategy is "dense" (single-host), or on any exact
+        sharded step (the fused sharded form additionally overlaps the
+        cross-shard collectives with shard-local compute).  On
+        gather-strategy steps (m_t far below the platform crossover)
+        the staged re-rank touches only m_t rows, which a full-store
+        streaming pass cannot beat, so ``auto`` leaves them staged.
+        """
+        if self.fused is False:
+            return False
+        if self.use_index(t):
+            return False
+        if self.fused is True:
+            return True
+        if self.mesh is not None:
+            return True
+        return self.strategy_for(t) == "dense"
+
+    def _fused_masked(self, use_ix: bool) -> bool:
+        """Masked-path fused decision.  The masked path is ONE program
+        (per caps bucket), so the choice is global over the bucket —
+        same rule as :meth:`use_fused` with the build-time strategy."""
+        if self.fused is False or use_ix:
+            return False
+        if self.fused is True:
+            return True
+        if self.mesh is not None:
+            return True
+        return self.strategy == "dense"
+
     def use_stream(self, batch: int, n: int | None = None) -> bool:
         """Stream the exact screen / full scan at this (batch, store) size?
 
@@ -689,7 +757,8 @@ class GoldDiffEngine:
 
     def _key(self, kind: str, t, x_t: Array, extra: tuple = ()):
         mesh_sig = () if self.mesh is None else \
-            (("mesh", self.shard_axis, self.n_shards),)
+            (("mesh", self.shard_axis, self.n_shards,
+              self.batch_axis, self.batch_shards),)
         # streamed screening programs tile the store, so the tile size
         # is part of the compiled program's identity; sharded programs
         # stream by their LOCAL row count (what the shard bodies see)
@@ -776,6 +845,22 @@ class GoldDiffEngine:
                                            strategy=self.strategy_for(t))
         return out.astype(x_t.dtype)
 
+    def _fused_body(self, x_t: Array, t: int) -> Array:
+        """Fused single-pass static step (``ops.fused_step``): coarse
+        screen, exact re-rank and aggregation in one program; the
+        streaming forms never materialize a [B, N] distance matrix or
+        a [B, m, D] candidate tensor."""
+        a, sig2 = self.constants(t)
+        m_t, k_t = self.sizes(t)
+        q = x_t / a
+        out = ops.fused_step(q, self._proxy_query(q), self.X, self.proxy,
+                             m_t, k_t, sig2, x_norms=self.x_norms,
+                             proxy_norms=self.proxy_norms,
+                             backend=self.backend, strategy=self.strategy,
+                             stream=self.use_stream(x_t.shape[0]),
+                             tile=self.screen_tile)
+        return out.astype(x_t.dtype)
+
     # -- sharded (mesh / shard_map) pipeline ---------------------------------
     def _shard_mapped(self, local, n_extra_rep: int = 0):
         """shard_map ``local`` over the layout's stacked per-shard arrays.
@@ -792,11 +877,25 @@ class GoldDiffEngine:
             row += [L.offsets, L.wrange]
             rep = [L.centroids, L.centroid_norms]
         sp = PartitionSpec(self.shard_axis)
-        in_specs = (sp,) * len(row) + \
-            (PartitionSpec(),) * (1 + n_extra_rep + len(rep))
-        mapped = shard_map_compat(local, self.mesh, in_specs,
-                                  PartitionSpec())
-        return lambda x_t, *extra: mapped(*row, x_t, *extra, *rep)
+        # 2D (batch x store) mesh: the query batch (and the output)
+        # shard over ``batch_axis`` while the store stays sharded over
+        # ``shard_axis``; every cross-shard collective names only
+        # shard_axis, so it runs independently per batch group.
+        bsp = (PartitionSpec() if self.batch_axis is None
+               else PartitionSpec(self.batch_axis))
+        in_specs = (sp,) * len(row) + (bsp,) + \
+            (PartitionSpec(),) * (n_extra_rep + len(rep))
+        mapped = shard_map_compat(local, self.mesh, in_specs, bsp)
+
+        def call(x_t, *extra):
+            if self.batch_shards > 1 and x_t.shape[0] % self.batch_shards:
+                raise ValueError(
+                    f"batch {x_t.shape[0]} does not divide over "
+                    f"batch_axis {self.batch_axis!r} "
+                    f"(size {self.batch_shards})")
+            return mapped(*row, x_t, *extra, *rep)
+
+        return call
 
     def _unpack_local(self, args, n_extra: int = 0):
         """Split a shard_map body's operands back into named pieces
@@ -872,6 +971,36 @@ class GoldDiffEngine:
 
         return self._shard_mapped(local)
 
+    def _sharded_fused_static(self, t: int):
+        """Sharded fused static step: same math as
+        :meth:`_sharded_static` (bitwise — the fused local step reuses
+        the identical kernel ops) with the cross-shard collectives
+        issued ahead of the shard-local compute they overlap
+        (``distributed/retrieval.fused_local_step``)."""
+        from repro.distributed.retrieval import fused_local_step
+
+        L, ax = self._layout, self.shard_axis
+        a, sig2 = self.constants(t)
+        m_t, k_t = self.sizes(t)
+        m_cap = min(m_t, L.n_loc)
+        k_cap = max(1, min(k_t, m_cap))
+        strategy = self.strategy
+        backend = self.backend
+
+        def local(*args):
+            (X, xn, pr, pn, ids, offs, wr, cents, cnorms,
+             x_t) = self._unpack_local(args)
+            q = x_t / a
+            qp = self._proxy_query(q)
+            out = fused_local_step(
+                X, xn, q, qp, pr, pn, m_cap, m_t, m_t, k_cap, k_t, k_t,
+                sig2, ax, backend=backend, strategy=strategy,
+                stream=self.use_stream(x_t.shape[0], L.n_loc),
+                tile=self.screen_tile)
+            return out.astype(x_t.dtype)
+
+        return self._shard_mapped(local)
+
     def _sharded_masked_body(self, x_t: Array, t: Array,
                              caps=None) -> Array:
         """Scan/pjit-compatible sharded step (one program, traced t).
@@ -881,7 +1010,8 @@ class GoldDiffEngine:
         the k_t cut applied through the cross-shard threshold instead
         of a positional mask (the same set, up to distance ties).
         """
-        from repro.distributed.retrieval import (golden_local_topk,
+        from repro.distributed.retrieval import (fused_local_step,
+                                                 golden_local_topk,
                                                  local_coarse_exact,
                                                  merged_golden_mean)
 
@@ -889,6 +1019,7 @@ class GoldDiffEngine:
         n = self.store.n
         m_min, m_max, k_min, k_max = self.cfg.sizes(n)
         m_cap, k_cap, p_cap, use_ix = self._masked_caps(caps)
+        fused = self._fused_masked(use_ix)
         m_loc = min(m_cap, L.n_loc)
         if use_ix:
             p_pad = p_cap
@@ -913,6 +1044,14 @@ class GoldDiffEngine:
             sig = jnp.asarray(self.schedule.b)[tt] / a
             q = x_t / a
             qp = self._proxy_query(q)
+            if fused:
+                out = fused_local_step(
+                    X, xn, q, qp, pr, pn, m_loc, m_cap, m_t, k_loc,
+                    k_cap, k_t, sig * sig, ax, backend=backend,
+                    strategy=strategy,
+                    stream=self.use_stream(x_t.shape[0], L.n_loc),
+                    tile=self.screen_tile)
+                return out.astype(x_t.dtype)
             if use_ix:
                 nprobe_t = self._masked_nprobe_t(g, m_t, k_t, p_pad)
                 cand, pd2 = ops.ivf_screen_local(
@@ -963,6 +1102,8 @@ class GoldDiffEngine:
         if key not in self._stage_costs:
             if kind == "full_scan":
                 costs = full_scan_costs(self, batch)
+            elif kind == "fused_step":
+                costs = fused_step_costs(self, t, batch)
             else:
                 costs = step_stage_costs(self, t, batch)
                 if kind == "select":
@@ -1016,18 +1157,23 @@ class GoldDiffEngine:
     def denoise(self, x_t: Array, t: int, jit: bool = True) -> Array:
         """Full GoldDiff step for the Optimal base (unbiased SS on S_t)."""
         t = int(t)
+        fused = self.use_fused(t)
+        kind = "fused_step" if fused else "denoise"
         if self.mesh is not None:
-            body = lambda: self._sharded_static("denoise", t)
+            body = (lambda: self._sharded_fused_static(t)) if fused \
+                else (lambda: self._sharded_static("denoise", t))
+        elif fused:
+            body = lambda: lambda x: self._fused_body(x, t)
         else:
             body = lambda: lambda x: self._denoise_body(x, t)
         if not jit:
             return body()(x_t)
         b0 = self._builds
-        fn = self.program(self._key("denoise", t, x_t, self._index_sig(t)),
+        fn = self.program(self._key(kind, t, x_t, self._index_sig(t)),
                           lambda: self.jitter(body()))
         if not obs_trace.tracer().enabled:
             return fn(x_t)
-        return self._traced("denoise", t, x_t, fn, self._builds > b0)
+        return self._traced(kind, t, x_t, fn, self._builds > b0)
 
     # -- masked (scan/pjit-compatible) path -----------------------------------
     def _masked_nprobe_pad(self) -> int:
@@ -1117,6 +1263,18 @@ class GoldDiffEngine:
         a = jnp.asarray(self.schedule.a)[t]
         sig = jnp.asarray(self.schedule.b)[t] / a
         q = x_t / a
+        if self._fused_masked(use_ix):
+            # fused single-pass masked step: the traced (m_t, k_t)
+            # masks enter the fused epilogue (same +inf / NEG_INF
+            # semantics as the staged masks below)
+            out = ops.fused_step(
+                q, self._proxy_query(q), self.X, self.proxy,
+                m_cap, min(k_cap, m_cap), sig * sig,
+                x_norms=self.x_norms, proxy_norms=self.proxy_norms,
+                backend=self.backend, strategy=self.strategy,
+                stream=self.use_stream(x_t.shape[0]),
+                tile=self.screen_tile, m_t=m_t, k_t=k_t)
+            return out.astype(x_t.dtype)
         if use_ix:
             # probe width varies with the traced t through the mask; the
             # gather is padded to the bucket's (or the grid's) worst

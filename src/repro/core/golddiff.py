@@ -101,6 +101,11 @@ class GoldDiff:
     :class:`GoldDiffEngine`).  ``screen=``/``screen_tile=`` control the
     streamed-vs-materialized exact screening crossover (one-pass tiled
     top-m at O(B (m + tile)) memory vs the dense [B, N] matrix).
+    ``fused="auto"|True|False`` routes eligible steps through the
+    single-pass fused step kernel (``kernels/fused_step.py``: screen +
+    re-rank + aggregate in one program, no [B, m, D] candidate
+    materialization); ``batch_axis=`` shards the *query* batch over a
+    second mesh axis (2D batch x store mesh).
     """
 
     def __init__(self, base, cfg: GoldDiffConfig | None = None,
@@ -108,7 +113,8 @@ class GoldDiff:
                  storage_dtype=None, index=None, probe_schedule=None,
                  strategy: str = "auto", index_mode: str = "auto",
                  mesh=None, shard_axis: str = "data",
-                 screen: str = "auto", screen_tile: int | None = None):
+                 screen: str = "auto", screen_tile: int | None = None,
+                 fused: str | bool = "auto", batch_axis: str | None = None):
         self.base = base
         self.cfg = cfg or GoldDiffConfig()
         self.store: DatasetStore = base.store
@@ -130,7 +136,8 @@ class GoldDiff:
                                      strategy=strategy,
                                      index_mode=index_mode,
                                      mesh=mesh, shard_axis=shard_axis,
-                                     screen=screen, **engine_kw)
+                                     screen=screen, fused=fused,
+                                     batch_axis=batch_axis, **engine_kw)
 
     @property
     def backend(self) -> str:

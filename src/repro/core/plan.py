@@ -48,7 +48,8 @@ import dataclasses
 from repro.core.schedules import sampling_timesteps
 
 __all__ = ["BucketCaps", "PlanBucket", "TrajectoryPlan", "build_plan",
-           "step_shapes", "step_stage_costs", "full_scan_costs"]
+           "step_shapes", "step_stage_costs", "fused_step_costs",
+           "full_scan_costs"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -234,6 +235,35 @@ def step_stage_costs(engine, t: int, batch: int = 1) -> dict:
         costs["aggregate"] = {"flops": 2.0 * b * k_t * dim,
                               "bytes": b * k_t * (dim * esz + 4.0)}
     return costs
+
+
+def fused_step_costs(engine, t: int, batch: int = 1) -> dict:
+    """Analytic FLOPs/bytes of the fused single-pass step kind.
+
+    One stage (``fused_step``): the fused program streams the proxy and
+    dataset stores exactly once — coarse screen, exact re-rank, and the
+    top-k epilogue in one pass — so the byte model reads each operand
+    ONCE (n rows of proxy + X at storage width, queries/outputs at
+    fp32, plus the [B, m] carry and the k golden rows the epilogue
+    gathers).  FLOPs are the two per-tile GEMMs over all N rows plus
+    the gather-form aggregate over k.  Deliberately an undercount of
+    any real schedule (re-reads, spills), keeping ``achieved <= peak``
+    meaningful in the roofline cell.
+    """
+    b = float(batch)
+    n = float(engine.store.n)
+    dim = float(engine.store.dim)
+    dp = float(engine.proxy.shape[1])
+    esz = float(_elem_size(engine))
+    m_t, k_t = engine.sizes(t)
+    flops = 2.0 * b * n * dp + 2.0 * b * n * dim + 2.0 * b * k_t * dim
+    byts = (n * (dp + dim) * esz            # one streaming store pass
+            + 2.0 * n * 4.0                 # fp32 row norms (both sides)
+            + b * (dp + dim) * 4.0          # queries
+            + b * m_t * 12.0                # [B, m] carry (neg, idx, d2)
+            + b * k_t * (dim * esz + 8.0)   # epilogue golden-row gather
+            + b * dim * 4.0)                # output
+    return {"fused_step": {"flops": flops, "bytes": byts}}
 
 
 def full_scan_costs(engine, batch: int = 1) -> dict:

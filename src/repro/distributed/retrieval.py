@@ -39,8 +39,8 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.dataset import DatasetStore, downsample_proxy
-from repro.distributed.sharding import (crossshard_kth, lse_merge_mean,
-                                        shard_map_compat)
+from repro.distributed.sharding import (crossshard_kth, kth_from_gathered,
+                                        lse_merge_mean, shard_map_compat)
 from repro.index.shard import ShardedLayout, shard_layout
 from repro.index.store import build_index
 from repro.kernels import ops
@@ -95,7 +95,7 @@ def build_shard_indexes(store: DatasetStore, mesh: Mesh, axis: str = "data",
 
 def local_coarse_exact(qp, proxy_loc, pnorms_loc, m_cap: int, m_sort: int,
                        m, axis: str, backend: str = "xla",
-                       stream: bool = False, tile: int = ops.DEFAULT_TILE):
+                       stream: bool = False, tile: int | None = None):
     """Shard-local exact proxy screening + cross-shard top-m threshold.
 
     Local top-``m_cap`` by matmul-form proxy distance, then a global
@@ -138,6 +138,57 @@ def golden_local_topk(X_loc, xn_loc, q, cand, cand_valid, k_cap: int,
 def merged_golden_mean(X_loc, idx, neg, kth, sig2, axis: str,
                        strategy: str = "gather") -> Array:
     """Aggregate owned golden members and LSE-merge across shards."""
+    lg = jnp.where(neg >= kth[:, None],
+                   jnp.maximum(neg / (2.0 * sig2), NEG_INF), NEG_INF)
+    acc, m_l, l_l = ops.golden_partial_aggregate(X_loc, idx, lg,
+                                                 strategy=strategy)
+    return lse_merge_mean(acc, m_l, l_l, axis)
+
+
+def fused_local_step(X_loc, xn_loc, q, qp, proxy_loc, pnorms_loc,
+                     m_cap: int, m_sort: int, m, k_cap: int, k_sort: int, k,
+                     sig2, axis: str, backend: str = "xla",
+                     strategy: str = "gather", stream: bool = False,
+                     tile: int | None = None) -> Array:
+    """One fused shard-local GoldDiff step with collective-compute overlap.
+
+    Runs the same screen -> re-rank -> aggregate math as
+    :func:`local_coarse_exact` + :func:`golden_local_topk` +
+    :func:`merged_golden_mean` — the same kernel ops in the same order,
+    so the result is **bitwise identical** to the staged sharded path —
+    but restructures the dataflow so each cross-shard collective is
+    issued *before* the shard-local compute it has no dependency on:
+
+    * the m-threshold ``all_gather`` (k floats per shard) starts before
+      the exact re-rank GEMM — the threshold is only consumed by the
+      post-GEMM validity mask, so the collective hides behind the
+      heaviest local stage;
+    * the k-threshold ``all_gather`` starts before the golden-row
+      gather feeding the partial aggregate — the rows depend on ``idx``
+      alone, so the prefetch overlaps the second collective.
+
+    XLA's latency-hiding scheduler can only overlap what the dataflow
+    permits; this ordering makes the independence explicit instead of
+    hoping the staged graph gets rescheduled.  ``m`` / ``k`` may be
+    traced (masked path); ``m_sort`` / ``k_sort`` are their static
+    bounds.
+    """
+    cand, d2p = ops.screen_topm(qp, proxy_loc, m_cap, x_norms=pnorms_loc,
+                                tile=tile, stream=stream, backend=backend)
+    negp = -d2p
+    # collective in flight ...
+    g_m = jax.lax.all_gather(negp, axis, axis=1)
+    # ... while the shard-local exact re-rank runs
+    d2 = ops.support_distances(q, X_loc, cand, x_norms=xn_loc,
+                               backend=backend, strategy=strategy)
+    mth = kth_from_gathered(g_m, m_sort, m)
+    d2 = jnp.where(negp >= mth[:, None], d2, jnp.inf)
+    neg, pos = jax.lax.top_k(-d2, k_cap)
+    idx = jnp.take_along_axis(cand, pos, axis=-1)
+    # second collective in flight while the aggregate's golden-row
+    # gather (inside golden_partial_aggregate) proceeds
+    g_k = jax.lax.all_gather(neg, axis, axis=1)
+    kth = kth_from_gathered(g_k, k_sort, k)
     lg = jnp.where(neg >= kth[:, None],
                    jnp.maximum(neg / (2.0 * sig2), NEG_INF), NEG_INF)
     acc, m_l, l_l = ops.golden_partial_aggregate(X_loc, idx, lg,

@@ -207,6 +207,21 @@ def crossshard_kth(neg_local: jnp.ndarray, k_sort: int, k,
     engine path varies k_t inside one program.
     """
     g = jax.lax.all_gather(neg_local, axis, axis=1)
+    return kth_from_gathered(g, k_sort, k)
+
+
+def kth_from_gathered(g: jnp.ndarray, k_sort: int, k) -> jnp.ndarray:
+    """Threshold-extraction half of :func:`crossshard_kth`, for callers
+    that issue the ``all_gather`` themselves.
+
+    The fused sharded step (``distributed/retrieval.fused_local_step``)
+    starts the gather *before* the shard-local exact re-rank — the two
+    have no data dependency, so the collective hides behind the GEMM —
+    and only then extracts the threshold from the landed buffer.  Keeping
+    the extraction here (same top_k, same clip) guarantees the overlap
+    form selects bit-for-bit the same candidates as the staged
+    ``crossshard_kth``.
+    """
     flat = g.reshape(g.shape[0], -1)
     k_sort = min(k_sort, flat.shape[-1])
     vals = jax.lax.top_k(flat, k_sort)[0]

@@ -46,6 +46,8 @@ import jax.numpy as jnp
 from repro.kernels import ref
 from repro.kernels.centroid_scan import centroid_scan as _cscan
 from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.fused_step import (fused_candidates_pallas,
+                                      fused_candidates_scan, fused_posterior)
 from repro.kernels.golden_aggregate import golden_aggregate as _agg
 from repro.kernels.golden_attention import (golden_attention_decode as _gattn,
                                             select_golden_blocks)
@@ -53,7 +55,8 @@ from repro.kernels.golden_rerank import support_sqdist as _sqd
 from repro.kernels.golden_support_aggregate import (
     golden_support_aggregate as _sagg)
 from repro.kernels.pdist import pdist as _pdist
-from repro.kernels.screen import (DEFAULT_TILE, full_scan_partial_stream,
+from repro.kernels.screen import (DEFAULT_TILE, SCAN_TILE,
+                                  full_scan_partial_stream,
                                   full_scan_stream, screen_topm_pallas,
                                   screen_topm_scan)
 
@@ -101,7 +104,7 @@ def pdist(q, x, q_norms=None, x_norms=None, backend: str = DEFAULT_BACKEND,
 
 
 def screen_topm(q, x, m: int, q_norms=None, x_norms=None,
-                tile: int = DEFAULT_TILE, stream: bool = True,
+                tile: int | None = None, stream: bool = True,
                 backend: str = DEFAULT_BACKEND, **kw):
     """Exact top-m rows of x by squared distance, read exactly once.
 
@@ -116,8 +119,11 @@ def screen_topm(q, x, m: int, q_norms=None, x_norms=None,
     distance matrix (tiled ``pdist`` kernel on pallas backends) plus
     one wide ``lax.top_k`` — which is the right shape below the
     engine's streamed-vs-materialized crossover, where one big GEMM
-    beats the scan's per-tile merge overhead (measured ~2x on XLA:CPU;
-    see ``benchmarks/screen_speedup.py``).
+    beats the scan's per-tile merge overhead (measured ~1.6x on
+    XLA:CPU at the scan-path default tile; see
+    ``benchmarks/screen_speedup.py``).  ``tile=None`` resolves per
+    path: ``SCAN_TILE`` for the lax.scan fallback, ``DEFAULT_TILE``
+    for the Pallas VMEM block.
     """
     if not stream:
         if backend == "xla":
@@ -126,7 +132,8 @@ def screen_topm(q, x, m: int, q_norms=None, x_norms=None,
             pdist(q, x, q_norms, x_norms, backend=backend), m)
     if backend == "xla":
         return screen_topm_scan(q, x, m, q_norms, x_norms, tile=tile)
-    return screen_topm_pallas(q, x, m, q_norms, x_norms, bn=tile,
+    return screen_topm_pallas(q, x, m, q_norms, x_norms,
+                              bn=DEFAULT_TILE if tile is None else tile,
                               interpret=(backend != "pallas"), **kw)
 
 
@@ -177,6 +184,59 @@ def golden_rerank(q, x, cand, k: int, x_norms=None,
         d2 = jnp.where(valid, d2, jnp.inf)
     neg, pos = jax.lax.top_k(-d2, k)
     return jnp.take_along_axis(cand, pos, axis=-1), -neg
+
+
+def fused_step(q, qp, x, proxy, m: int, k: int, sigma2,
+               x_norms=None, proxy_norms=None,
+               backend: str = DEFAULT_BACKEND, strategy: str | None = None,
+               stream: bool = True, tile: int | None = None,
+               m_t=None, k_t=None, **kw):
+    """One fused GoldDiff denoise step: posterior mean in a single pass.
+
+    Coarse screen + exact re-rank + softmax aggregation fused
+    (``kernels.fused_step``): store tiles stream through once carrying
+    a running proxy top-m with the exact distances threaded along, and
+    the epilogue aggregates only the k selected golden rows — no
+    [B, N] re-rank matrix, no [B, m, D] candidate materialization, no
+    second read of the store.  ``q`` [B, D] are rescaled queries
+    (``x_t / a``), ``qp`` [B, dp] their proxy projections; returns the
+    posterior mean [B, D] fp32.
+
+    ``strategy`` picks the epilogue's aggregation form (and, with
+    ``stream=False``, the re-rank form) exactly as in the staged ops:
+    "gather" keeps everything sublinear in N (the streaming story);
+    "dense" keeps the scatter + GEMM aggregate dense-strategy engines
+    already use — the identical op the staged body runs, so fused and
+    staged stay op-compatible per strategy.  ``stream=False`` (xla
+    only) keeps the materialized candidate form below the
+    streamed-screen byte crossover.  The pallas backends always stream
+    (the megakernel is the TPU shape).  ``sigma2`` may be traced;
+    ``m_t`` / ``k_t`` (optional traced scalars) mask scheduled sizes
+    for the caps-aware masked path.  Fused-vs-staged outputs agree at
+    fp32 reduction order (~1e-7 relative; the candidate *sets* are
+    bit-identical, see the kernel module docstring).
+    """
+    interpret = backend != "pallas"
+    if backend != "xla":
+        idx, d2 = fused_candidates_pallas(
+            qp, q, proxy, x, m, proxy_norms, x_norms,
+            bn=DEFAULT_TILE if tile is None else tile,
+            interpret=interpret, **kw)
+    elif stream:
+        idx, d2 = fused_candidates_scan(qp, q, proxy, x, m,
+                                        proxy_norms, x_norms, tile=tile)
+    else:
+        idx, pd2 = screen_topm(qp, proxy, m, x_norms=proxy_norms,
+                               stream=False, backend=backend)
+        d2 = support_distances(q, x, idx, x_norms, backend=backend,
+                               strategy=strategy)
+        # surplus slots (m > N) alias clamped rows with finite dense
+        # distances; propagate the screen's +inf marker so they stay
+        # weightless, matching the streaming forms
+        d2 = jnp.where(jnp.isinf(pd2), jnp.inf, d2)
+    return fused_posterior(x, idx, d2, k, sigma2, backend=backend,
+                           m_t=m_t, k_t=k_t, interpret=interpret,
+                           strategy=strategy)
 
 
 def golden_support_aggregate(x, idx, logits, backend: str = DEFAULT_BACKEND,
@@ -338,7 +398,7 @@ def ivf_screen(qp, proxy_sorted, proxy_norms_sorted, offsets, centroids,
 
 def golden_aggregate(q, x, sigma2: float, x_norms=None,
                      backend: str = DEFAULT_BACKEND, stream: bool = False,
-                     tile: int = DEFAULT_TILE, **kw):
+                     tile: int | None = None, **kw):
     """Full-scan posterior mean (Eq. 2) via streaming softmax.
 
     The pallas backends always stream (online-softmax carry in VMEM
@@ -350,14 +410,15 @@ def golden_aggregate(q, x, sigma2: float, x_norms=None,
     if backend == "xla":
         if stream:
             return full_scan_stream(q, x, float(sigma2), x_norms=x_norms,
-                                    tile=tile)
+                                    tile=DEFAULT_TILE if tile is None
+                                    else tile)
         return ref.golden_aggregate_ref(q, x, sigma2, x_norms)
     return _agg(q, x, float(sigma2), x_norms=x_norms,
                 interpret=(backend != "pallas"), **kw)
 
 
 def golden_full_partial(q, x, sigma2: float, x_norms=None,
-                        stream: bool = False, tile: int = DEFAULT_TILE):
+                        stream: bool = False, tile: int | None = None):
     """Unnormalized softmax state of the FULL local store; (acc, m, l).
 
     The shard-local half of a full scan: states LSE-merge exactly
@@ -371,7 +432,9 @@ def golden_full_partial(q, x, sigma2: float, x_norms=None,
     """
     if stream:
         return full_scan_partial_stream(q, x, float(sigma2),
-                                        x_norms=x_norms, tile=tile)
+                                        x_norms=x_norms,
+                                        tile=DEFAULT_TILE if tile is None
+                                        else tile)
     d2 = ref.pdist_ref(q, x, x_norms=x_norms)
     lg = jnp.maximum(-d2 * ref.finite_inv_two_sigma2(sigma2), ref.NEG_INF)
     return golden_partial_aggregate(x, None, lg)
@@ -395,9 +458,10 @@ def flash_attention(q, k, v, causal: bool = True,
 
 
 __all__ = ["pdist", "screen_topm", "support_sqdist", "support_distances",
-           "golden_rerank", "golden_support_aggregate",
+           "golden_rerank", "fused_step", "fused_posterior",
+           "golden_support_aggregate",
            "golden_partial_aggregate", "golden_full_partial",
            "golden_aggregate", "centroid_scan", "ivf_screen",
            "ivf_screen_local", "golden_attention_decode",
            "select_golden_blocks", "flash_attention", "DEFAULT_BACKEND",
-           "BACKENDS", "DEFAULT_TILE", "set_dispatch_hook", "dispatch_hook"]
+           "BACKENDS", "DEFAULT_TILE", "SCAN_TILE", "set_dispatch_hook", "dispatch_hook"]

@@ -57,6 +57,15 @@ from repro.kernels import ref
 NEG_INF = -1e30
 DEFAULT_BQ = 8
 DEFAULT_TILE = 4096
+# Scan-path default N-tile.  The lax.scan fallback holds only [B, tile]
+# live distances, so it affords a 4x larger tile than the Pallas VMEM
+# block — and XLA:CPU wall-clock improves monotonically with tile size
+# (fewer merge dispatches, fatter GEMMs): at N=65536, B=32 the carry
+# merge measures 42/118/421 ms (m=512/1638/6553) at tile=4096 vs
+# 33/64/204 ms at 16384, recovering most of the streamed-vs-
+# materialized gap (materialized: 20/40/130 ms where the [B, N] buffer
+# fits).  Callers pass ``tile=None`` to get this per-path default.
+SCAN_TILE = 16384
 
 
 def _merge_topm(vals, idx, neg_tile, idx_tile, m: int):
@@ -163,11 +172,11 @@ def screen_topm_pallas(q: jnp.ndarray, x: jnp.ndarray, m: int,
 
 # -- XLA (lax.scan) fallback --------------------------------------------------
 
-@functools.partial(jax.jit, static_argnames=("m", "tile"))
+@functools.partial(jax.jit, static_argnames=("m", "tile", "hier"))
 def screen_topm_scan(q: jnp.ndarray, x: jnp.ndarray, m: int,
                      q_norms: jnp.ndarray | None = None,
                      x_norms: jnp.ndarray | None = None,
-                     tile: int = DEFAULT_TILE):
+                     tile: int | None = None, hier: bool = False):
     """Tiled-scan twin of :func:`screen_topm_pallas` for any XLA backend.
 
     Peak live memory O(B * (m + tile)); the [N, d] store is sliced in
@@ -175,8 +184,28 @@ def screen_topm_scan(q: jnp.ndarray, x: jnp.ndarray, m: int,
     ragged final tile slides back to ``[N - tile, N)`` (the
     dynamic-slice clamp) and the already-seen overlap columns are
     masked to -inf, so no O(N d) padded copy exists for any N.
+    ``tile=None`` picks :data:`SCAN_TILE` (the scan path affords a much
+    larger tile than the Pallas VMEM block, and CPU wall-clock improves
+    with it — see the constant's comment).
+
+    ``hier=True`` switches the merge to a two-level hierarchical form:
+    each tile selects its own top-m independently inside the scan, the
+    [nt, B, m] level-0 lists stack as scan outputs, and a log2(nt)-deep
+    pairwise tree re-selects the global top-m.  Left-first
+    concatenation at every level keeps ``lax.top_k``'s lowest-index tie
+    rule, so both forms are bit-identical to the materialized screen.
+    It is OFF by default on measurement: XLA:CPU's TopK custom call is
+    strongly data-dependent (a descending-sorted prefix — exactly the
+    carry-merge's input — runs ~10x faster than random input), and
+    ``lax.scan`` serializes on every backend, so removing the merge
+    from the carry buys no critical-path win while the independent
+    per-tile top-k forfeits the fast path (measured ~3x slower end to
+    end on CPU at N=65536).  The flag remains for backends whose
+    per-tile top-k vectorizes across tiles.
     """
     n, d = x.shape
+    if tile is None:
+        tile = SCAN_TILE
     q32 = q.astype(jnp.float32)
     if q_norms is None:
         q_norms = jnp.sum(q32 ** 2, -1)
@@ -186,9 +215,10 @@ def screen_topm_scan(q: jnp.ndarray, x: jnp.ndarray, m: int,
     tile = min(tile, max(n, 1))
     b = q.shape[0]
     qn = q_norms.astype(jnp.float32)[:, None]
+    starts = jnp.arange(0, -(-n // tile) * tile, tile, dtype=jnp.int32)
+    nt = starts.shape[0]
 
-    def body(carry, start):
-        vals, idx = carry
+    def tile_neg(start):
         eff = jnp.minimum(start, n - tile)     # ragged tail: overlap back
         xt = jax.lax.dynamic_slice_in_dim(x, eff, tile).astype(jnp.float32)
         xnt = jax.lax.dynamic_slice_in_dim(x_norms, eff, tile)
@@ -197,14 +227,38 @@ def screen_topm_scan(q: jnp.ndarray, x: jnp.ndarray, m: int,
             preferred_element_type=jnp.float32)
         d2 = jnp.maximum(qn + xnt[None, :] - 2.0 * dot, 0.0)
         cols = eff + jax.lax.broadcasted_iota(jnp.int32, d2.shape, 1)
-        neg = jnp.where(cols >= start, -d2, -jnp.inf)   # mask re-seen rows
-        return _merge_topm(vals, idx, neg, cols, m), None
+        return jnp.where(cols >= start, -d2, -jnp.inf), cols  # mask re-seen
 
-    init = (jnp.full((b, m), -jnp.inf, jnp.float32),
-            jnp.zeros((b, m), jnp.int32))
-    (vals, idx), _ = jax.lax.scan(
-        body, init,
-        jnp.arange(0, -(-n // tile) * tile, tile, dtype=jnp.int32))
+    if hier and m < tile and nt > 1:
+        # Two-level hierarchical merge (opt-in; see docstring): per-tile
+        # independent top-m stacked as scan outputs (O(B N m/tile) —
+        # strictly below the materialized [B, N] when m < tile), then a
+        # log2(nt)-deep pairwise tree re-selects the global top-m.
+        def level0(carry, start):
+            neg, cols = tile_neg(start)
+            v, sel = jax.lax.top_k(neg, m)
+            return carry, (v, jnp.take_along_axis(cols, sel, axis=-1))
+
+        _, (vals, idx) = jax.lax.scan(level0, 0, starts)
+        while vals.shape[0] > 1:
+            if vals.shape[0] % 2:              # odd level: -inf ghost tile
+                vals = jnp.concatenate(
+                    [vals, jnp.full_like(vals[:1], -jnp.inf)], axis=0)
+                idx = jnp.concatenate([idx, jnp.zeros_like(idx[:1])], axis=0)
+            cat_v = jnp.concatenate([vals[0::2], vals[1::2]], axis=-1)
+            cat_i = jnp.concatenate([idx[0::2], idx[1::2]], axis=-1)
+            vals, sel = jax.lax.top_k(cat_v, m)
+            idx = jnp.take_along_axis(cat_i, sel, axis=-1)
+        vals, idx = vals[0], idx[0]
+    else:
+        def body(carry, start):
+            vals, idx = carry
+            neg, cols = tile_neg(start)
+            return _merge_topm(vals, idx, neg, cols, m), None
+
+        init = (jnp.full((b, m), -jnp.inf, jnp.float32),
+                jnp.zeros((b, m), jnp.int32))
+        (vals, idx), _ = jax.lax.scan(body, init, starts)
     return jnp.minimum(idx, max(n - 1, 0)), -vals
 
 

@@ -71,7 +71,7 @@ RETRYABLE_ERRORS = (XlaRuntimeError, TransientExecutorError)
 # "gauss_seg" (the runtime's Gaussian fallback must stay reliable for
 # the ladder's last rung to be real).
 DEFAULT_TARGETS = ("plan_seg", "plan_seg_mix", "serve_scan", "denoise",
-                   "full_scan")
+                   "fused_step", "full_scan")
 
 FAULT_KINDS = ("nan", "latency", "error", "oom", "shard_drop", "evict")
 

@@ -104,6 +104,13 @@ class ServeEngine:
     :func:`repro.core.plan.build_plan`: lower thresholds give
     finer-grained plans — more seams for the runtime to admit/expire
     at, at the cost of more programs to warm (see docs/SERVING.md).
+
+    ``fused`` forwards to the engine (``GoldDiffEngine(fused=...)``):
+    with the fused single-pass step on, ``warmup()`` precompiles the
+    *fused* program kinds — the static ``fused_step`` programs and the
+    fused-body plan/scan segments — so zero post-warmup compiles holds
+    unchanged (the program cache keys the fused kind; the CI recompile
+    guard runs with ``fused=True``).
     """
 
     def __init__(self, dataset: str | DatasetStore,
@@ -114,7 +121,8 @@ class ServeEngine:
                  plan_threshold: float = 0.15,
                  max_buckets: int | None = None,
                  clip_value: float | None = 3.0, index=None,
-                 index_mode: str = "auto"):
+                 index_mode: str = "auto", fused: str | bool = "auto",
+                 batch_axis: str | None = None):
         # a DatasetStore passes through directly — the store-lifecycle
         # path (repro.index.ingest) serves its capacity-padded view
         # without a synthetic-dataset detour
@@ -127,7 +135,8 @@ class ServeEngine:
         base_den = make_denoiser(base, self.store, self.schedule)
         self.denoiser = GoldDiff(base_den, gd_cfg or GoldDiffConfig(),
                                  mesh=mesh, index=index,
-                                 index_mode=index_mode)
+                                 index_mode=index_mode, fused=fused,
+                                 batch_axis=batch_axis)
         # pinned here so baseline subclasses may swap ``denoiser`` (e.g.
         # unwrap to the full-scan base) and keep the program cache
         self._engine = self.denoiser.engine

@@ -33,9 +33,12 @@ deterministically under a fake clock.
 
 Span taxonomy (see README "Observability"):
 
-  ``engine.denoise|select|full_scan``  one per engine entry dispatch
-  ``stage.screen|ivf_screen|rerank|aggregate|full_scan``  point events
-      carrying analytic ``flops``/``bytes`` tags (``core.plan``)
+  ``engine.denoise|select|full_scan|fused_step``  one per engine entry
+      dispatch (``fused_step`` when the fused="auto" policy routes the
+      step through the single-pass fused program)
+  ``stage.screen|ivf_screen|rerank|aggregate|full_scan|fused_step``
+      point events carrying analytic ``flops``/``bytes`` tags
+      (``core.plan``; fused steps emit one whole-step stage event)
   ``dispatch.<kind>``  one per program-cache dispatch (TraceHook)
   ``plan.segment``     one per trajectory-plan bucket execution
   ``wave.segment``     one per serving-runtime segment (+ ``wave.*`` /

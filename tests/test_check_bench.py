@@ -183,7 +183,7 @@ def test_obs_overhead_budget_pair(tmp_path):
 def _roofline_record(**over):
     rec = {"roofline/peak/peak_gflops": 100.0,
            "roofline/peak/peak_gbps": 20.0}
-    for stage in ("screen", "rerank", "aggregate", "full_scan"):
+    for stage in check_bench.ROOFLINE_STAGES:
         rec[f"roofline/denoise/N1/t1/{stage}/achieved_gflops"] = 50.0
         rec[f"roofline/denoise/N1/t1/{stage}/achieved_gbps"] = 10.0
     rec.update(over)

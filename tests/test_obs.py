@@ -212,7 +212,11 @@ def test_dispatch_spans_carry_compile_tags_and_count_metrics():
     assert warm and not any(e["tags"]["compile"] for e in warm)
     compiles = reg.snapshot()["golddiff_compiles_total"]["value"]
     assert compiles == len(cold) == eng._builds
-    assert reg.snapshot()["golddiff_dispatch_total_denoise"]["value"] == 2
+    # fused="auto" (the default) routes this dense-strategy static step
+    # through the single-pass fused program kind
+    kinds = {e["name"].split(".", 1)[1] for e in spans}
+    assert kinds == {"fused_step"}
+    assert reg.snapshot()["golddiff_dispatch_total_fused_step"]["value"] == 2
 
 
 def test_disabled_tracer_is_bit_identical_with_zero_recompiles():
@@ -234,7 +238,9 @@ def test_disabled_tracer_is_bit_identical_with_zero_recompiles():
         np.testing.assert_array_equal(after[t], ref[t])
     assert eng._builds == b0, "tracing must not change program cache keys"
     names = {e["name"] for e in tr.events()}
-    assert "engine.denoise" in names and "stage.rerank" in names
+    # fused="auto" (the default) routes these dense-strategy steps
+    # through the single-pass fused program
+    assert "engine.fused_step" in names and "stage.fused_step" in names
 
 
 def test_fault_events_land_on_the_trace_stream():

@@ -81,6 +81,29 @@ def test_screen_topm_shapes(backend, n, m, tile):
     _assert_matches_oracle(q, x, m, backend, tile=tile)
 
 
+@pytest.mark.parametrize("n,m,tile", [
+    (1000, 64, 128),     # many tiles, deep merge tree
+    (1000, 64, 250),     # ragged final tile, odd level-0 count
+    (999, 30, 100),      # odd tile count at every tree level
+    (1200, 1500, 256),   # m > N: surplus slots survive the tree
+])
+def test_screen_topm_hier_matches_oracle(n, m, tile):
+    """The opt-in two-level hierarchical merge (per-tile top-m + tree
+    reduce) is bit-identical to the oracle AND to the default carry,
+    including lowest-index tie order (integer data forces ties)."""
+    from repro.kernels.screen import screen_topm_scan
+    q, x = _int_data(11, 4, n, 8)
+    ri, rd = ref.screen_topm_ref(q, x, m)
+    hi_, hd = screen_topm_scan(q, x, m, tile=tile, hier=True)
+    ci, cd = screen_topm_scan(q, x, m, tile=tile)
+    np.testing.assert_array_equal(np.asarray(hd), np.asarray(rd))
+    np.testing.assert_array_equal(np.asarray(hd), np.asarray(cd))
+    fin = np.isfinite(np.asarray(rd))
+    np.testing.assert_array_equal(np.asarray(hi_)[fin], np.asarray(ri)[fin])
+    np.testing.assert_array_equal(np.asarray(hi_)[fin], np.asarray(ci)[fin])
+    assert np.asarray(hi_).min() >= 0 and np.asarray(hi_).max() < n
+
+
 @pytest.mark.parametrize("backend", BACKENDS)
 def test_screen_topm_all_tied(backend):
     """Fully degenerate store (every distance identical): the streamed
